@@ -1,0 +1,42 @@
+"""Shared benchmark harness: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (derived = a
+benchmark-specific figure of merit, e.g. speedup over Base).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def _block(x):
+    return jax.tree_util.tree_map(
+        lambda a: a.block_until_ready() if hasattr(a, "block_until_ready")
+        else a, x)
+
+
+def timeit(fn: Callable, *, warmup: int = 1, reps: int = 3) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        _block(fn())
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        _block(fn())
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def header() -> None:
+    print("name,us_per_call,derived", flush=True)

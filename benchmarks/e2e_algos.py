@@ -1,0 +1,38 @@
+"""Tables 4/5: end-to-end algorithm runtime across experimental arms
+(Base / hand-Fused / Gen / Gen-FA / Gen-FNR)."""
+
+import numpy as np
+
+from repro.algos import data, als_cg, autoencoder, glm, kmeans, l2svm, mlogreg
+from .common import emit, timeit
+
+ARMS = ("none", "hand", "fnr", "fa", "gen")
+
+
+def main() -> None:
+    X, Y, ypm = data.classification(4000, 64, k=4, seed=1)
+    Xr, yr = data.regression(4000, 32, seed=2)
+    Xc, C0 = data.clusters(4000, 16, k=5, seed=3)
+    Xr8 = data.ratings(1024, 768, rank=8, bs=128, block_density=0.25, seed=4)
+    Xim = data.images(1024, 128, seed=5)
+
+    suites = [
+        ("l2svm", lambda m: l2svm.run(X, ypm, max_iter=5, mode=m)),
+        ("mlogreg", lambda m: mlogreg.run(X, Y, max_outer=2, max_inner=4,
+                                          mode=m)),
+        ("glm", lambda m: glm.run(Xr, yr, max_outer=2, max_inner=4, mode=m)),
+        ("kmeans", lambda m: kmeans.run(Xc, C0, max_iter=5, mode=m)),
+        ("als_cg", lambda m: als_cg.run(Xr8, rank=8, max_iter=2,
+                                        max_inner=2, mode=m)),
+        ("autoencoder", lambda m: autoencoder.run(Xim, h1=64, h2=2,
+                                                  batch=256, epochs=1,
+                                                  mode=m)),
+    ]
+    for name, fn in suites:
+        times = {}
+        for arm in ARMS:
+            times[arm] = timeit(lambda: fn(arm), warmup=1, reps=2)
+        base = times["none"]
+        for arm in ARMS:
+            emit(f"e2e_{name}_{arm}", times[arm],
+                 f"speedup_vs_base={base / times[arm]:.2f}")

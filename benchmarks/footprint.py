@@ -1,0 +1,36 @@
+"""Fig. 10 (adapted): operator-chain length vs materialization cost.
+
+SystemML's experiment probed JIT/i-cache limits of inlined generated code;
+the TPU analogue is intermediate materialization: one fused operator for an
+n-op cell chain vs n materialized basic operators."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fused, fusion_mode, ir
+from .common import emit, timeit
+
+
+def chain_fn(n_ops: int):
+    @fused
+    def f(X, r):
+        c = X / r
+        for i in range(n_ops):
+            c = c * float(i + 1)
+        return c.sum()
+    return f
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(4000, 250)), jnp.float32)
+    r = jnp.asarray(np.abs(rng.normal(size=(4000, 1))) + 1.0, jnp.float32)
+    for n_ops in (4, 16, 64):
+        f = chain_fn(n_ops)
+        times = {}
+        for mode in ("none", "gen"):
+            with fusion_mode(mode):
+                times[mode] = timeit(lambda: f(X, r))
+        emit(f"footprint_chain{n_ops}_base", times["none"], "")
+        emit(f"footprint_chain{n_ops}_gen", times["gen"],
+             f"speedup_vs_base={times['none'] / times['gen']:.2f}")

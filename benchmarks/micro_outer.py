@@ -1,0 +1,41 @@
+"""Fig. 8(h): Outer template micro — sum(X ⊙ log(UVᵀ + eps)) over a
+block-sparsity sweep.  Gen over BCSR does work ∝ non-zero blocks; Base
+materializes the dense m×n product (the paper's orders-of-magnitude gap)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fused, fusion_mode, ir
+from repro.kernels.blocksparse import BCSR
+from .common import emit, timeit
+
+BS = 128
+GRID = (16, 16)          # 2048 × 2048 cells
+RANK = 32
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    m, n = GRID[0] * BS, GRID[1] * BS
+    U = jnp.asarray(rng.normal(size=(m, RANK)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(n, RANK)), jnp.float32)
+
+    @fused
+    def outer(X, U, V):
+        return (ir.abs_(X) * ir.log((U @ V.T) ** 2 + 1e-15)).sum()
+
+    for density in (1.0, 0.25, 0.05):
+        mask = rng.random(GRID) < density
+        mask.flat[0] = True
+        dense = rng.normal(size=(m, n)).astype(np.float32) \
+            * np.kron(mask, np.ones((BS, BS), np.float32))
+        Xs = BCSR.from_dense(dense, bs=BS)
+        Xd = jnp.asarray(dense)
+
+        hand = timeit(
+            lambda: jnp.sum(jnp.abs(Xd) * jnp.log((U @ V.T) ** 2 + 1e-15)))
+        with fusion_mode("gen"):
+            gen = timeit(lambda: outer(Xs, U, V))
+        emit(f"outer_sum_d{density}_dense", hand, "")
+        emit(f"outer_sum_d{density}_gen_bcsr", gen,
+             f"speedup={hand / gen:.2f},nblocks={Xs.nblocks}")

@@ -1,0 +1,29 @@
+"""Fig. 8(e,g): Row template micro — Xᵀ(Xv) and Xᵀ(XV)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fused, fusion_mode
+from .common import emit, timeit
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    m, n = 20000, 256
+    X = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+
+    @fused
+    def mmchain(X, v):
+        return X.T @ (X @ v)
+
+    for k, tag in ((1, "mv"), (2, "mm")):
+        v = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+        hand = timeit(lambda: X.T @ (X @ v))
+        times = {}
+        for mode in ("none", "gen"):
+            with fusion_mode(mode):
+                times[mode] = timeit(lambda: mmchain(X, v))
+        emit(f"row_mmchain_{tag}_{m}x{n}_base", times["none"], "")
+        emit(f"row_mmchain_{tag}_{m}x{n}_hand", hand, "")
+        emit(f"row_mmchain_{tag}_{m}x{n}_gen", times["gen"],
+             f"speedup_vs_base={times['none'] / times['gen']:.2f}")

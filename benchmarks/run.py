@@ -1,0 +1,46 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.run [module ...]``
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from .common import header
+
+MODULES = [
+    "micro_cell",        # Fig. 8(a,b)
+    "micro_magg",        # Fig. 8(c,d)
+    "micro_row",         # Fig. 8(e,g)
+    "micro_outer",       # Fig. 8(h)
+    "micro_compressed",  # Fig. 9
+    "footprint",         # Fig. 10 (adapted)
+    "compile_overhead",  # Table 3 / Fig. 11
+    "plan_enum",         # Fig. 12
+    "e2e_algos",         # Tables 4/5
+    "e2e_distributed",   # Table 6 (shard_map over host devices)
+]
+
+
+def main() -> None:
+    import importlib
+    want = sys.argv[1:] or MODULES
+    header()
+    for name in want:
+        t0 = time.perf_counter()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+        except ImportError as e:
+            print(f"# skip {name}: {e}", flush=True)
+            continue
+        print(f"# --- {name} ---", flush=True)
+        mod.main()
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

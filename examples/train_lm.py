@@ -1,0 +1,17 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+with fused loss, checkpointing, and restart.
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 300
+(CPU demo: use --steps 30 --preset tiny)
+"""
+
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += ["--arch", "minitron-4b", "--preset", "100m",
+                     "--steps", "300", "--batch", "8", "--seq", "512",
+                     "--fusion", "gen"]
+    main()

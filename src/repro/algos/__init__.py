@@ -1,0 +1,18 @@
+"""The paper's Table-2 algorithm suite, built on the fusion API.
+
+Every algorithm runs under any experimental arm:
+  mode ∈ {"gen", "fa", "fnr", "none"}  — planner arms (Gen / Gen-FA /
+  Gen-FNR / Base), plus ``"hand"`` — direct jnp, the stand-in for
+  SystemML's hand-coded fused operators (XLA fuses locally).
+"""
+
+from . import als_cg, autoencoder, data, glm, kmeans, l2svm, mlogreg
+
+ALGOS = {
+    "l2svm": l2svm,
+    "mlogreg": mlogreg,
+    "glm": glm,
+    "kmeans": kmeans,
+    "als_cg": als_cg,
+    "autoencoder": autoencoder,
+}

@@ -1,0 +1,124 @@
+"""Two-layer sigmoid autoencoder (H1=500, H2=2, batch=512) — SystemML
+`autoencoder-2layer.dml`.
+
+Mini-batch SGD with momentum.  GEMMs stay basic operators; the fusion
+sites are the bias+activation chains (Cell) and the backward sprop chains
+δ ⊙ h ⊙ (1−h) (Cell), plus the loss aggregate — exactly the fusion profile
+the paper reports for AutoEncoder (solid but bounded speedups, §5.4).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .util import fs
+from repro.core import ir, fused, fusion_mode
+
+
+@fused
+def _act(Z, b):
+    return ir.sigmoid(Z + b)
+
+
+@fused
+def _dact(D, H):
+    return D * H * (1.0 - H)      # sprop chain
+
+
+@fused
+def _mse(R):
+    return (R ** 2).sum()
+
+
+def _forward(X, Ws, bs, mode_fused=True):
+    H1 = _act(X @ Ws[0], bs[0])
+    H2 = _act(H1 @ Ws[1], bs[1])
+    H3 = _act(H2 @ Ws[2], bs[2])
+    O = H3 @ Ws[3] + bs[3]
+    return H1, H2, H3, O
+
+
+def run(X, h1: int = 64, h2: int = 2, batch: int = 128, epochs: int = 1,
+        lr: float = 0.1, mu: float = 0.9, mode: str = "gen",
+        pallas: str = "never", seed: int = 0):
+    """Returns (params, loss per step)."""
+    if mode == "hand":
+        return _run_hand(X, h1, h2, batch, epochs, lr, mu, seed)
+    m, n = X.shape
+    rng = np.random.default_rng(seed)
+
+    def init(i, o):
+        return jnp.asarray(rng.normal(size=(i, o)).astype(np.float32)
+                           * np.sqrt(2.0 / i))
+
+    Ws = [init(n, h1), init(h1, h2), init(h2, h1), init(h1, n)]
+    bs = [jnp.zeros((1, d), jnp.float32) for d in (h1, h2, h1, n)]
+    vel = [jnp.zeros_like(w) for w in Ws]
+    losses = []
+    steps = max(1, (m // batch) * epochs)
+    with fusion_mode(mode, pallas=pallas):
+        for step in range(steps):
+            lo = (step * batch) % max(m - batch, 1)
+            Xb = X[lo:lo + batch]
+            H1, H2, H3, O = _forward(Xb, Ws, bs)
+            R = O - Xb
+            losses.append(fs(_mse(R)) / batch)
+            # backward
+            D4 = 2.0 * R / batch
+            G4 = H3.T @ D4
+            D3 = _dact(D4 @ Ws[3].T, H3)
+            G3 = H2.T @ D3
+            D2 = _dact(D3 @ Ws[2].T, H2)
+            G2 = H1.T @ D2
+            D1 = _dact(D2 @ Ws[1].T, H1)
+            G1 = Xb.T @ D1
+            grads = [G1, G2, G3, G4]
+            dbs = [D1.sum(0, keepdims=True), D2.sum(0, keepdims=True),
+                   D3.sum(0, keepdims=True), D4.sum(0, keepdims=True)]
+            for i in range(4):
+                vel[i] = mu * vel[i] - lr * grads[i]
+                Ws[i] = Ws[i] + vel[i]
+                bs[i] = bs[i] - lr * dbs[i]
+    return (Ws, bs), losses
+
+
+def _run_hand(X, h1, h2, batch, epochs, lr, mu, seed):
+    m, n = X.shape
+    rng = np.random.default_rng(seed)
+
+    def init(i, o):
+        return jnp.asarray(rng.normal(size=(i, o)).astype(np.float32)
+                           * np.sqrt(2.0 / i))
+
+    Ws = [init(n, h1), init(h1, h2), init(h2, h1), init(h1, n)]
+    bs = [jnp.zeros((1, d), jnp.float32) for d in (h1, h2, h1, n)]
+    vel = [jnp.zeros_like(w) for w in Ws]
+    sig = lambda z: 1 / (1 + jnp.exp(-z))
+    losses = []
+    steps = max(1, (m // batch) * epochs)
+    for step in range(steps):
+        lo = (step * batch) % max(m - batch, 1)
+        Xb = X[lo:lo + batch]
+        H1 = sig(Xb @ Ws[0] + bs[0])
+        H2 = sig(H1 @ Ws[1] + bs[1])
+        H3 = sig(H2 @ Ws[2] + bs[2])
+        O = H3 @ Ws[3] + bs[3]
+        R = O - Xb
+        losses.append(float(jnp.sum(R * R)) / batch)
+        D4 = 2.0 * R / batch
+        G4 = H3.T @ D4
+        D3 = (D4 @ Ws[3].T) * H3 * (1 - H3)
+        G3 = H2.T @ D3
+        D2 = (D3 @ Ws[2].T) * H2 * (1 - H2)
+        G2 = H1.T @ D2
+        D1 = (D2 @ Ws[1].T) * H1 * (1 - H1)
+        G1 = Xb.T @ D1
+        grads = [G1, G2, G3, G4]
+        dbs = [D1.sum(0, keepdims=True), D2.sum(0, keepdims=True),
+               D3.sum(0, keepdims=True), D4.sum(0, keepdims=True)]
+        for i in range(4):
+            vel[i] = mu * vel[i] - lr * grads[i]
+            Ws[i] = Ws[i] + vel[i]
+            bs[i] = bs[i] - lr * dbs[i]
+    return (Ws, bs), losses

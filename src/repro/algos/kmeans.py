@@ -1,0 +1,75 @@
+"""K-Means (Lloyd's, 1 run, k=5) — SystemML `Kmeans.dml`.
+
+Fusion sites: the distance-matrix post-processing chain
+D = rowSums(X²) − 2·XCᵀ + rowSums(C²)ᵀ with the row-min reduction (Row),
+and the WCSS multi-aggregate.  The assignment matmuls stay basic GEMMs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import ir, fused, fusion_mode
+
+
+@fused
+def _sq_rowsums(X):
+    return (X ** 2).rowsums()
+
+
+@fused
+def _min_dist(XC, xsq, csq):
+    """Row-wise min over D = xsq − 2·XC + csqᵀ (distances to centroids)."""
+    D = xsq - 2.0 * XC + csq
+    return D._agg("min", "row")
+
+
+def run(X, C0, max_iter: int = 20, eps: float = 1e-12, mode: str = "gen",
+        pallas: str = "never"):
+    """Returns (C, within-cluster sum of squares per iteration)."""
+    if mode == "hand":
+        return _run_hand(X, C0, max_iter, eps)
+    m, n = X.shape
+    k = C0.shape[0]
+    C = C0
+    wcss_hist = []
+    with fusion_mode(mode, pallas=pallas):
+        xsq = _sq_rowsums(X)                       # constant across iters
+        for _ in range(max_iter):
+            XC = X @ C.T                           # basic GEMM
+            csq = jnp.sum(C * C, axis=1).reshape(1, k)
+            dmin = _min_dist(XC, xsq, csq)
+            # hard assignment (argmin) — data movement, not LA: jnp
+            D = xsq - 2.0 * XC + csq
+            A = jnp.equal(D, dmin).astype(jnp.float32)
+            A = A / A.sum(axis=1, keepdims=True)   # break ties evenly
+            wcss = float(jnp.sum(dmin))
+            wcss_hist.append(wcss)
+            counts = A.sum(axis=0).reshape(k, 1)
+            C_new = (A.T @ X) / jnp.maximum(counts, 1.0)
+            if float(jnp.max(jnp.abs(C_new - C))) < eps:
+                C = C_new
+                break
+            C = C_new
+    return C, wcss_hist
+
+
+def _run_hand(X, C0, max_iter, eps):
+    m, n = X.shape
+    k = C0.shape[0]
+    C = C0
+    xsq = jnp.sum(X * X, axis=1, keepdims=True)
+    hist = []
+    for _ in range(max_iter):
+        D = xsq - 2.0 * (X @ C.T) + jnp.sum(C * C, axis=1)[None, :]
+        dmin = D.min(axis=1, keepdims=True)
+        A = jnp.equal(D, dmin).astype(jnp.float32)
+        A = A / A.sum(axis=1, keepdims=True)
+        hist.append(float(jnp.sum(dmin)))
+        counts = A.sum(axis=0).reshape(k, 1)
+        C_new = (A.T @ X) / jnp.maximum(counts, 1.0)
+        if float(jnp.max(jnp.abs(C_new - C))) < eps:
+            C = C_new
+            break
+        C = C_new
+    return C, hist

@@ -1,0 +1,8 @@
+"""Small shared helpers for the algorithm suite."""
+
+import jax.numpy as jnp
+
+
+def fs(x) -> float:
+    """Python float from any single-element array (fused ops return (1,1))."""
+    return float(jnp.asarray(x).reshape(()))

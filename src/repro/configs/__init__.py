@@ -1,0 +1,3 @@
+from .base import ModelConfig, ShapeConfig
+from .registry import ARCH_IDS, all_configs, get_config
+from .shapes import SHAPES, applicable, cells

@@ -1,0 +1,15 @@
+"""Cost-based operator-fusion-plan optimization (the paper's contribution).
+
+Pipeline: IR (HOP DAG) → OFMC candidate exploration (memo table) →
+cost-based candidate selection (plan partitions, interesting points,
+MPSkipEnum) → code generation (CPlans → XLA/Pallas fused operators, plan
+cache).
+"""
+
+from . import ir
+from .api import Fused, fuse_exprs, fused, fusion_mode, current_config
+from .cost import CostParams, TPU_V5E
+from .select import plan
+
+__all__ = ["ir", "Fused", "fused", "fuse_exprs", "fusion_mode",
+           "current_config", "CostParams", "TPU_V5E", "plan"]

@@ -1,0 +1,150 @@
+"""Public fusion API.
+
+``@fused`` traces a python function of :class:`Expr` arguments into a LinOp
+graph at first call (per shape/sparsity/mode signature), runs the
+three-phase optimizer (explore → select → codegen) and executes the
+generated plan.  Works under ``jax.jit`` — planning happens at trace time
+with static shapes (the analogue of SystemML's dynamic recompilation with
+known sizes), and compiled operators are memoized in the plan cache.
+
+    @fused
+    def hinge(X, w, y):
+        return ir.relu(1 - y * (X @ w)).unary("pow2").sum()
+
+    loss = hinge(Xarr, warr, yarr)                 # planned + fused
+    with fusion_mode("fnr"): loss = hinge(...)     # heuristic arm
+"""
+
+from __future__ import annotations
+
+import contextlib
+import inspect
+import threading
+from dataclasses import dataclass, field, replace
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.blocksparse import BCSR, DictCompressed
+from . import ir
+from .codegen import CompiledPlan, PLAN_CACHE, compile_plan
+from .cost import CostParams, TPU_V5E
+from .select import ExecPlan, plan as plan_graph
+
+
+@dataclass
+class FusionConfig:
+    mode: str = "gen"            # gen | fa | fnr | none
+    pallas: str = "never"        # never | interpret | tpu
+    params: CostParams = field(default_factory=lambda: TPU_V5E)
+
+
+_STATE = threading.local()
+
+
+def current_config() -> FusionConfig:
+    cfg = getattr(_STATE, "cfg", None)
+    if cfg is None:
+        cfg = FusionConfig()
+        _STATE.cfg = cfg
+    return cfg
+
+
+@contextlib.contextmanager
+def fusion_mode(mode: Optional[str] = None, pallas: Optional[str] = None,
+                params: Optional[CostParams] = None):
+    old = current_config()
+    new = replace(old)
+    if mode is not None:
+        new.mode = mode
+    if pallas is not None:
+        new.pallas = pallas
+    if params is not None:
+        new.params = params
+    _STATE.cfg = new
+    try:
+        yield new
+    finally:
+        _STATE.cfg = old
+
+
+# --------------------------------------------------------------------------
+
+def _signature(args: dict[str, object], cfg: FusionConfig):
+    sig = [cfg.mode, cfg.pallas]
+    for name, v in args.items():
+        if isinstance(v, BCSR):
+            sig.append((name, "bcsr", v.shape, v.bs, round(v.block_sparsity, 4)))
+        elif isinstance(v, DictCompressed):
+            sig.append((name, "dict", v.shape))
+        else:
+            sig.append((name, "dense", tuple(v.shape)))
+    return tuple(sig)
+
+
+def _as_expr_inputs(args: dict[str, object],
+                    sparsity: dict[str, float]) -> dict[str, ir.Expr]:
+    out = {}
+    for name, v in args.items():
+        if isinstance(v, BCSR):
+            sp = sparsity.get(name, v.block_sparsity)
+            out[name] = ir.matrix(name, v.shape, sparsity=sp)
+        elif isinstance(v, DictCompressed):
+            out[name] = ir.matrix(name, v.shape,
+                                  sparsity=sparsity.get(name, 1.0))
+        else:
+            shape = tuple(v.shape)
+            assert len(shape) == 2, f"{name}: expected 2-D, got {shape}"
+            out[name] = ir.matrix(name, shape,
+                                  sparsity=sparsity.get(name, 1.0))
+    return out
+
+
+class Fused:
+    """Callable wrapper planning+executing a traced expression function."""
+
+    def __init__(self, fn: Callable, sparsity: Optional[dict] = None):
+        self.fn = fn
+        self.sparsity = dict(sparsity or {})
+        self.names = list(inspect.signature(fn).parameters)
+        self._plans: dict[tuple, tuple[ExecPlan, CompiledPlan]] = {}
+
+    def plan_for(self, **shaped_args) -> ExecPlan:
+        cfg = current_config()
+        exprs = _as_expr_inputs(shaped_args, self.sparsity)
+        outs = self.fn(**exprs)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        graph = ir.Graph.build(list(outs))
+        return plan_graph(graph, cfg.mode, cfg.params)
+
+    def __call__(self, *args, **kwargs):
+        cfg = current_config()
+        bound = dict(zip(self.names, args))
+        bound.update(kwargs)
+        key = _signature(bound, cfg)
+        entry = self._plans.get(key)
+        if entry is None:
+            eplan = self.plan_for(**bound)
+            compiled = compile_plan(eplan, pallas=cfg.pallas)
+            self._plans[key] = (eplan, compiled)
+        else:
+            eplan, compiled = entry
+        return compiled(bound)
+
+
+def fused(fn: Optional[Callable] = None, *, sparsity: Optional[dict] = None):
+    if fn is None:
+        return lambda f: Fused(f, sparsity=sparsity)
+    return Fused(fn, sparsity=sparsity)
+
+
+def fuse_exprs(outputs, bindings: dict[str, object],
+               mode: Optional[str] = None):
+    """One-shot: plan + execute a hand-built expression DAG."""
+    cfg = current_config()
+    graph = ir.Graph.build(outputs if isinstance(outputs, (list, tuple))
+                           else [outputs])
+    eplan = plan_graph(graph, mode or cfg.mode, cfg.params)
+    return compile_plan(eplan, pallas=cfg.pallas)(bindings)

@@ -1,0 +1,190 @@
+"""Code generation & runtime integration (paper §2.1-2.2).
+
+Turns selected plans into executable operators and whole ExecPlans into
+callables.  The **plan cache** memoizes generated operators by structural
+CPlan hash (shapes/ops/binding/variant) so dynamic recompilation and
+repeated tracing reuse compiled operators — the paper's Fig. 11 mechanism.
+
+Execution paths per operator are chosen by the dispatcher in
+``kernels/ops.py`` (dense XLA, dense Pallas, BCSR sparsity-exploiting,
+CLA-compressed).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.blocksparse import BCSR, DictCompressed
+from .cost import FusedOpSpec
+from .cplan import CPlan, build_cplan
+from .ir import Graph, Node
+from .select import ExecPlan, MultiAggSpec
+
+
+# --------------------------------------------------------------------------
+# plan cache
+# --------------------------------------------------------------------------
+
+@dataclass
+class PlanCacheStats:
+    hits: int = 0
+    misses: int = 0
+    codegen_time_s: float = 0.0
+
+    @property
+    def total(self) -> int:
+        return self.hits + self.misses
+
+
+class PlanCache:
+    def __init__(self) -> None:
+        self._ops: dict[str, "GeneratedOp"] = {}
+        self.stats = PlanCacheStats()
+
+    def get_or_build(self, graph: Graph, spec) -> tuple["GeneratedOp", "CPlan"]:
+        """Returns (generated operator, this spec's CPlan).  The operator
+        may come from a structurally-equal plan of a *different* graph, so
+        callers bind inputs positionally via the returned CPlan."""
+        t0 = time.perf_counter()
+        cplan = build_cplan(graph, spec)
+        key = cplan.cache_key()
+        hit = self._ops.get(key)
+        if hit is not None:
+            self.stats.hits += 1
+            return hit, cplan
+        op = GeneratedOp(cplan)
+        self._ops[key] = op
+        self.stats.misses += 1
+        self.stats.codegen_time_s += time.perf_counter() - t0
+        return op, cplan
+
+    def clear(self) -> None:
+        self._ops.clear()
+        self.stats = PlanCacheStats()
+
+
+PLAN_CACHE = PlanCache()
+
+
+# --------------------------------------------------------------------------
+# generated operators
+# --------------------------------------------------------------------------
+
+@dataclass
+class GeneratedOp:
+    """A fused operator: CPlan + execution dispatch (SystemML's SpoofOp).
+
+    The program is interpreted at trace time under ``jax.jit`` — the jitted
+    computation is the compiled generated operator (the janino-compile
+    analogue); jax caches it per input shape/format signature.
+    """
+    cplan: CPlan
+    _jits: dict = field(default_factory=dict)
+
+    def _run(self, env: dict[int, object], pallas: str):
+        cp = self.cplan
+        main = env.get(cp.main.nid)
+        from repro.core.templates import TType
+        if isinstance(main, BCSR) and cp.ttype == TType.OUTER \
+                and pallas != "never" and cp.variant in ("right_mm",
+                                                         "full_agg"):
+            from repro.kernels.outerprod import outer_pallas
+            return outer_pallas(cp, env, interpret=pallas == "interpret")
+        return kops.execute(cp, env, pallas=pallas)
+
+    def __call__(self, env: dict[int, object], pallas: str = "never"):
+        if pallas == "interpret":
+            return self._run(env, pallas)     # validation path: stay eager
+        fn = self._jits.get(pallas)
+        if fn is None:
+            import jax
+            fn = jax.jit(lambda e: self._run(e, pallas))
+            self._jits[pallas] = fn
+        return fn(env)
+
+
+def _eval_basic(graph: Graph, node: Node, env: dict[int, object]):
+    """Basic (unfused) operator, sparse-format aware."""
+    ins = [env[i.nid] if i.op != "lit" else
+           jnp.asarray(float(i.attrs["value"]), jnp.float32).reshape(1, 1)
+           for i in node.inputs]
+    if node.is_matmul and isinstance(ins[0], BCSR) and not node.ta:
+        b = ins[1]
+        b = b.todense() if hasattr(b, "todense") else b
+        return kops.bcsr_matmul(ins[0], b.T if node.tb else b)
+    if node.op == "mul" and isinstance(ins[0], BCSR) \
+            and not isinstance(ins[1], BCSR) \
+            and getattr(ins[1], "shape", None) == ins[0].shape:
+        return kops.bcsr_mul_dense(ins[0], ins[1])
+    ins = [v.todense() if hasattr(v, "todense") else v for v in ins]
+    return kref.eval_node(node.op, ins, node.attrs)
+
+
+# --------------------------------------------------------------------------
+# executable plans
+# --------------------------------------------------------------------------
+
+@dataclass
+class CompiledPlan:
+    """Executable form of an ExecPlan: run specs in dependency order,
+    freeing intermediates when their last consumer has run (the paper's
+    'fewer materialized intermediates' at the plan level)."""
+    plan: ExecPlan
+    pallas: str = "never"
+    cache: PlanCache = field(default_factory=lambda: PLAN_CACHE)
+
+    def __call__(self, bindings: dict[str, object]):
+        graph = self.plan.graph
+        env: dict[int, object] = {}
+        for node in graph.inputs():
+            if node.name not in bindings:
+                raise KeyError(f"missing binding for input '{node.name}'")
+            env[node.nid] = bindings[node.name]
+        for node in graph.nodes:     # literals
+            if node.op == "lit":
+                env[node.nid] = jnp.full((1, 1), float(node.attrs["value"]),
+                                         jnp.float32)
+
+        last_use = _last_uses(self.plan)
+        for idx, spec in enumerate(self.plan.specs):
+            if isinstance(spec, MultiAggSpec) or (
+                    isinstance(spec, FusedOpSpec) and spec.fused):
+                op, my_cplan = self.cache.get_or_build(graph, spec)
+                # positional re-binding: cached operator's nids ≠ ours
+                op_env = {ob.nid: env[mb.nid] for ob, mb in
+                          zip(op.cplan.binds, my_cplan.binds)}
+                out = op(op_env, pallas=self.pallas)
+                if isinstance(spec, MultiAggSpec):
+                    for k, r in enumerate(spec.roots):
+                        env[r] = out[k].reshape(1, 1)
+                else:
+                    env[spec.root] = out
+            else:
+                env[spec.root] = _eval_basic(graph, graph.by_id[spec.root],
+                                             env)
+            for dead in last_use.get(idx, ()):    # free intermediates
+                if dead not in graph.output_ids:
+                    env.pop(dead, None)
+        outs = [env[o.nid] for o in graph.outputs]
+        return outs[0] if len(outs) == 1 else tuple(outs)
+
+
+def _last_uses(plan: ExecPlan) -> dict[int, list[int]]:
+    last: dict[int, int] = {}
+    for idx, spec in enumerate(plan.specs):
+        for i in spec.inputs:
+            last[i] = idx
+    out: dict[int, list[int]] = {}
+    for nid, idx in last.items():
+        out.setdefault(idx, []).append(nid)
+    return out
+
+
+def compile_plan(plan: ExecPlan, pallas: str = "never") -> CompiledPlan:
+    return CompiledPlan(plan, pallas=pallas)

@@ -1,0 +1,326 @@
+"""Analytical cost model and plan resolution (paper §4.3, Eq. 4).
+
+``C(P_i|q) = Σ_p ( T̂w_p + max(T̂r_p, T̂c_p) )`` over the basic/fused
+operators p that assignment q induces: write time + overlapped read/compute
+time, bandwidth-normalized.  Sparsity-exploiting operators scale compute by
+the sparsity of the main (driver) input; sparse inputs are read at
+nnz·(value+index) bytes; shared reads and CSEs are deduplicated via cost
+vectors; operators reachable over multiple paths with materialized output
+cost zero the second time, while *overlapping* fused operators pay their
+redundant compute (fuse-all semantics).
+
+The same walker that costs a plan also **extracts** it (`resolve_partition`
+returns :class:`FusedOpSpec` lists), so the executed plan is by construction
+the costed plan.
+
+Cost constants default to the TPU v5e roofline (819 GB/s HBM, 197 TFLOP/s
+bf16); the distributed variant prices reads of sharded side inputs at ICI
+all-gather bandwidth — the paper's "different read bandwidths for inputs of
+resulting distributed operations" (§4.4) mapped onto the mesh.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .ir import Graph, Node, sparse_safe_wrt
+from .memo import MemoEntry, MemoTable
+from .partitions import Partition, Point
+from .templates import TType
+
+# -- hardware constants (TPU v5e target) ------------------------------------
+
+@dataclass
+class CostParams:
+    read_bw: float = 819e9          # HBM read, B/s
+    write_bw: float = 819e9         # HBM write, B/s
+    compute_bw: float = 197e12      # peak FLOP/s (bf16 MXU)
+    dtype_bytes: int = 4
+    sparse_idx_bytes: int = 4
+    #: per-input read-bandwidth override (nid -> B/s): distributed side
+    #: inputs crossing shards are read at collective bandwidth.
+    input_read_bw: dict[int, float] = field(default_factory=dict)
+    #: hard constraint checker: (spec) -> bool valid; invalid => inf cost.
+    max_fused_inputs: int = 12      # VMEM-budget style constraint
+
+    def in_bw(self, nid: int) -> float:
+        return self.input_read_bw.get(nid, self.read_bw)
+
+
+TPU_V5E = CostParams()
+
+#: flop weight per output cell for cell-wise ops (transcendentals are
+#: many-flop on the VPU; same spirit as SystemML's per-op costs).
+_EXPENSIVE = {"exp": 16, "log": 16, "sigmoid": 20, "tanh": 20, "gelu": 24,
+              "silu": 20, "softplus": 20, "pow": 16, "sqrt": 4, "div": 4,
+              "recip": 4, "log1p": 16}
+
+
+def node_flops(node: Node) -> float:
+    if node.is_input or node.op in ("t", "idx"):
+        return 0.0
+    if node.is_matmul:
+        m, k, n = node.mm_dims()
+        return 2.0 * m * k * n
+    if node.is_agg:
+        return float(node.inputs[0].ncells)
+    w = _EXPENSIVE.get(node.op, 1)
+    return float(node.ncells) * w
+
+
+def node_bytes(node: Node, params: CostParams) -> float:
+    """Storage footprint (sparse-aware)."""
+    if node.sparsity < 1.0:
+        return node.ncells * node.sparsity * (params.dtype_bytes
+                                              + params.sparse_idx_bytes)
+    return float(node.ncells) * params.dtype_bytes
+
+
+# -- plan specs ---------------------------------------------------------------
+
+@dataclass
+class FusedOpSpec:
+    """One operator of the induced runtime plan: a fused operator (ttype
+    set) or a basic operator (ttype None).  ``cover`` maps covered node id →
+    chosen memo entry (root first)."""
+    root: int
+    ttype: Optional[TType]
+    cover: dict[int, Optional[MemoEntry]]
+    inputs: list[int]                     # distinct, order of discovery
+    driver: Optional[int] = None          # sparse-exploitation driver input
+
+    @property
+    def fused(self) -> bool:
+        return self.ttype is not None and len(self.cover) > 1
+
+
+def spec_cost(graph: Graph, spec: FusedOpSpec, params: CostParams) -> float:
+    if len(spec.inputs) > params.max_fused_inputs and spec.fused:
+        return math.inf                    # constraint violation (paper Z)
+    root = graph.by_id[spec.root]
+    sp = 1.0
+    if spec.driver is not None:
+        sp = max(graph.by_id[spec.driver].sparsity, 1e-12)
+
+    flops = 0.0
+    for nid in spec.cover:
+        n = graph.by_id[nid]
+        f = node_flops(n)
+        if n.is_matmul and spec.ttype is None:
+            # basic matmul exploits sparse left input (SystemML dispatches
+            # to sparse kernels)
+            f *= max(graph.by_id[n.inputs[0].nid].sparsity, 1e-12)
+        flops += f
+    if spec.driver is not None:
+        flops *= sp
+
+    t_r = 0.0
+    for i in spec.inputs:
+        n = graph.by_id[i]
+        t_r += node_bytes(n, params) / params.in_bw(i)
+    t_w = node_bytes(root, params) / params.write_bw
+    t_c = flops / params.compute_bw
+    return t_w + max(t_r, t_c)
+
+
+# -- sparse driver detection ---------------------------------------------------
+
+SPARSE_EXPLOIT_MAX = 0.7   # exploit sparsity in costs below this density
+
+
+def find_driver(graph: Graph, root: Node, cover: dict[int, object],
+                inputs: list[int], ttype: Optional[TType]) -> Optional[int]:
+    """Main-input sparse driver of a fused operator, if any: an input matrix
+    w.r.t. which the fused chain is sparse-safe (evaluating only at its
+    non-zeros is exact)."""
+    if ttype is None or ttype == TType.ROW:
+        # Row binds whole (possibly sparse) rows; it gets no per-cell
+        # asymptotic win — this is exactly why an overlapping Row plan
+        # "destroys" a sparse-safe Outer plan (paper §5.4 ALS-CG).
+        return None
+    # expression whose per-cell values must vanish where the driver is 0
+    expr = root
+    if root.is_agg:
+        if root.op not in ("sum", "sum_sq"):
+            return None
+        expr = root.inputs[0]
+    elif root.is_matmul:
+        a, b = root.inputs
+        expr = b if root.ta else a
+
+    best: Optional[int] = None
+    best_sp = SPARSE_EXPLOIT_MAX if ttype != TType.OUTER else 1.0 + 1e-9
+    for i in inputs:
+        n = graph.by_id[i]
+        if n.is_scalar or n.is_vector:
+            continue
+        if ttype == TType.OUTER and n.shape != expr.shape:
+            continue
+        if n.sparsity < best_sp and sparse_safe_wrt(expr, n):
+            best, best_sp = i, n.sparsity
+    return best
+
+
+# -- plan resolution (the GETPLANCOST walker, also used for extraction) --------
+
+#: cost-tie preference between template types at a plan root: multi-
+#: aggregates enable cross-operator sharing, Outer enables sparsity.
+_TIE_PREF = {TType.MAGG: 0, TType.OUTER: 1, TType.CELL: 2, TType.ROW: 3}
+
+
+def _build_spec(graph: Graph, memo: MemoTable, nid: int,
+                entry: Optional[MemoEntry],
+                banned: set[Point]) -> FusedOpSpec:
+    """Expand a root memo entry into the fused-operator spec it induces
+    (interior continuations picked by max fusion references, the paper's
+    "best plan regarding template type and fusion references")."""
+    node = graph.by_id[nid]
+    if entry is None or entry.n_refs == 0:
+        return FusedOpSpec(nid, None, {nid: None},
+                           [i.nid for i in node.inputs])
+    cover: dict[int, Optional[MemoEntry]] = {}
+    inputs: list[int] = []
+    in_seen: set[int] = set()
+
+    def walk(wid: int, e: MemoEntry) -> None:
+        if wid in cover:
+            return
+        cover[wid] = e
+        wnode = graph.by_id[wid]
+        for j, inp in enumerate(wnode.inputs):
+            fused = e.refs[j] >= 0 and (wid, inp.nid) not in banned
+            e_in = None
+            if fused:
+                e_in = memo.best_compatible(inp.nid, entry.ttype, banned)
+                fused = e_in is not None
+            if fused:
+                walk(inp.nid, e_in)              # type: ignore[arg-type]
+            elif inp.nid not in in_seen:
+                in_seen.add(inp.nid)
+                inputs.append(inp.nid)
+
+    walk(nid, entry)
+    drv = find_driver(graph, node, cover, inputs, entry.ttype)
+    return FusedOpSpec(nid, entry.ttype, cover, inputs, drv)
+
+
+def resolve_partition(graph: Graph, memo: MemoTable, part: Partition,
+                      banned: set[Point], params: CostParams = TPU_V5E,
+                      probe: str = "cost") -> list[FusedOpSpec]:
+    """Induce the runtime plan of partition ``part`` under assignment
+    ``banned``.
+
+    ``probe="cost"`` (Gen): per materialized node the root plan is chosen
+    by a memoized cost DP over candidate memo entries (fused alternatives
+    plus the basic operator), including the cost of the materialized
+    subgraphs each alternative leaves behind.
+
+    ``probe="greedy"`` (the fuse-all / fuse-no-redundancy heuristics):
+    always take the maximal-fusion entry — this is what lets an
+    overlapping Row plan destroy a sparse-safe Outer plan (paper §5.4).
+
+    Returns one spec per materialized operator in dependency order."""
+    choice: dict[int, FusedOpSpec] = {}
+    subcost: dict[int, float] = {}
+
+    def best(nid: int) -> float:
+        """Memoized cost of materializing nid (and everything below it)."""
+        if nid in subcost:
+            return subcost[nid]
+        node = graph.by_id[nid]
+        if node.is_input:
+            subcost[nid] = 0.0
+            return 0.0
+        subcost[nid] = 0.0          # cycle guard (DAG: unreachable)
+        cands: list[Optional[MemoEntry]]
+        if nid not in part.nodes:
+            cands = [None]
+        elif probe == "greedy":
+            cands = [memo.best_compatible(nid, None, banned)]
+        else:
+            cands = [None] + [
+                e for e in memo.entries(nid) if e.can_root
+                and not any((nid, r) in banned for r in e.ref_ids())]
+        best_c, best_s = math.inf, None
+        for e in cands:
+            spec = _build_spec(graph, memo, nid, e, banned)
+            c = spec_cost(graph, spec, params) \
+                + sum(best(i) for i in spec.inputs)
+            pref = _TIE_PREF.get(spec.ttype, 9) if spec.ttype else 9
+            if c < best_c * (1 - 1e-12) or (
+                    best_s is not None and abs(c - best_c) <= best_c * 1e-9
+                    and pref < (_TIE_PREF.get(best_s.ttype, 9)
+                                if best_s.ttype else 9)):
+                best_c, best_s = c, spec
+        choice[nid] = best_s            # type: ignore[assignment]
+        subcost[nid] = best_c
+        return best_c
+
+    # commit: walk the chosen DAG from roots/exits, emit specs once each
+    specs: list[FusedOpSpec] = []
+    emitted: set[int] = set()
+
+    def emit(nid: int) -> None:
+        node = graph.by_id[nid]
+        if nid in emitted or node.is_input:
+            return
+        emitted.add(nid)
+        if nid not in part.nodes:
+            return                       # planned elsewhere (other partition
+                                         # or basic fill-in by select())
+        best(nid)
+        spec = choice[nid]
+        for i in spec.inputs:
+            emit(i)
+        specs.append(spec)
+
+    for r in sorted(set(part.roots) | part.exits):
+        emit(r)
+    return specs
+
+
+def partition_cost(graph: Graph, memo: MemoTable, part: Partition,
+                   banned: set[Point], params: CostParams,
+                   ub: float = math.inf) -> float:
+    """GETPLANCOST with early abort once the partial cost exceeds ub."""
+    total = 0.0
+    for spec in resolve_partition(graph, memo, part, banned, params):
+        total += spec_cost(graph, spec, params)
+        if total >= ub:
+            return math.inf
+    return total
+
+
+# -- lower bounds for cost-based pruning (paper §4.4) ---------------------------
+
+def static_lower_bound(graph: Graph, memo: MemoTable, part: Partition,
+                       params: CostParams) -> float:
+    """C̲_{P_i}: read partition inputs once + minimal (sparsity-exploited)
+    compute + write partition roots/exits — a true lower bound of any plan."""
+    t_r = sum(node_bytes(graph.by_id[i], params) / params.in_bw(i)
+              for i in part.inputs)
+    sp_min = min((graph.by_id[i].sparsity for i in part.inputs
+                  if not graph.by_id[i].is_scalar), default=1.0)
+    t_c = sum(node_flops(graph.by_id[n]) for n in part.nodes) \
+        * max(sp_min, 1e-12) / params.compute_bw
+    t_w = sum(node_bytes(graph.by_id[r], params) / params.write_bw
+              for r in set(part.roots) | part.exits)
+    return max(t_r, t_c) + t_w
+
+
+def mp_cost(graph: Graph, banned: set[Point], params: CostParams,
+            written_anyway: frozenset[int] = frozenset()) -> float:
+    """GETMPCOST: each distinct materialization target forced by q costs at
+    least one write plus one read.  Targets in ``written_anyway`` (partition
+    roots/exits, whose write is already in the static bound) only add the
+    read — otherwise the bound would overestimate and mis-prune."""
+    targets = {t for (_, t) in banned}
+    total = 0.0
+    for t in targets:
+        b = node_bytes(graph.by_id[t], params)
+        total += b / params.read_bw
+        if t not in written_anyway:
+            total += b / params.write_bw
+    return total

@@ -1,0 +1,188 @@
+"""Candidate selection driver (paper §4): chooses the optimal, non-conflicting
+set of fusion plans per HOP DAG and induces the runtime plan.
+
+Modes mirror the paper's experimental arms:
+  * ``gen``  — cost-based MPSkipEnum per partition (the contribution),
+  * ``fa``   — fuse-all heuristic (maximal fusion, redundant CSE compute),
+  * ``fnr``  — fuse-no-redundancy (materialize every multi-consumer
+               intermediate),
+  * ``none`` — no fusion at all (Base): every operator basic.
+
+Multi-aggregate combining: selected MAgg-rooted fused operators that share
+at least one input merge into a single multi-output fused operator (paper
+§5.2: "Gen compiles a multi-aggregate with a 2×1 output matrix"), dedup-ing
+their shared scans.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .cost import (CostParams, FusedOpSpec, TPU_V5E, partition_cost,
+                   resolve_partition, spec_cost)
+from .enumerate import EnumStats, mp_skip_enum
+from .explore import ExploreStats, explore
+from .ir import Graph
+from .memo import MemoTable
+from .partitions import Partition, Point, build_partitions
+from .templates import TType
+
+MODES = ("gen", "fa", "fnr", "none")
+
+
+@dataclass
+class MultiAggSpec:
+    """k combined full aggregates sharing a single scan of their inputs."""
+    roots: list[int]
+    parts: list[FusedOpSpec]
+    inputs: list[int]
+
+    root = property(lambda self: self.roots[0])
+    ttype = TType.MAGG
+    fused = True
+    driver = None
+
+
+@dataclass
+class ExecPlan:
+    graph: Graph
+    specs: list          # FusedOpSpec | MultiAggSpec, dependency order
+    cost: float
+    memo: Optional[MemoTable] = None
+    enum_stats: Optional[EnumStats] = None
+    explore_stats: Optional[ExploreStats] = None
+
+    def fused_specs(self) -> list:
+        return [s for s in self.specs if getattr(s, "fused", False)]
+
+
+def select(graph: Graph, memo: MemoTable, mode: str = "gen",
+           params: CostParams = TPU_V5E,
+           enum_stats: Optional[EnumStats] = None) -> tuple[list, float]:
+    """Run selection, returning (specs in dependency order, total cost)."""
+    assert mode in MODES, mode
+    st = enum_stats if enum_stats is not None else EnumStats()
+    parts = build_partitions(graph, memo) if mode != "none" else []
+
+    specs: list = []
+    covered: set[int] = set()
+    produced: set[int] = set()
+    total_cost = 0.0
+    for part in parts:
+        st.partitions += 1
+        st.points_total += len(part.points)
+        st.space_size += 2 ** len(part.points)
+        banned = _assignment(graph, memo, part, mode, params, st)
+        probe = "greedy" if mode in ("fa", "fnr") else "cost"
+        part_specs = resolve_partition(graph, memo, part, banned, params,
+                                       probe=probe)
+        total_cost += sum(spec_cost(graph, s, params) for s in part_specs)
+        for s in part_specs:
+            specs.append(s)
+            produced.add(s.root)
+            covered.update(s.cover)
+
+    # demand-driven fill-in: basic operators for every node that some spec
+    # (or the graph outputs) reads but no partition plan produces.  Nodes
+    # covered inside fused operators and consumed only there need nothing.
+    demanded: list[int] = list(graph.output_ids)
+    for s in specs:
+        demanded.extend(s.inputs)
+    while demanded:
+        nid = demanded.pop()
+        node = graph.by_id[nid]
+        if nid in produced or node.is_input:
+            continue
+        spec = FusedOpSpec(nid, None, {nid: None},
+                           [i.nid for i in node.inputs])
+        specs.append(spec)
+        produced.add(nid)
+        total_cost += spec_cost(graph, spec, params)
+        demanded.extend(i.nid for i in node.inputs)
+
+    specs = _topo_order(graph, specs)
+    specs = _combine_multi_aggs(graph, specs, params)
+    return specs, total_cost
+
+
+def plan(graph: Graph, mode: str = "gen", params: CostParams = TPU_V5E,
+         prune_dominated: Optional[bool] = None) -> ExecPlan:
+    """Explore + select in one call (the paper's codegen compiler steps 1-2)."""
+    if mode == "none":
+        memo = MemoTable()
+        ex_st = ExploreStats()
+    else:
+        ex_st = ExploreStats()
+        dom = prune_dominated if prune_dominated is not None else mode in ("fa", "fnr")
+        memo = explore(graph, prune_dominated=dom, stats=ex_st)
+    en_st = EnumStats()
+    specs, cost = select(graph, memo, mode, params, enum_stats=en_st)
+    return ExecPlan(graph, specs, cost, memo, en_st, ex_st)
+
+
+# -- assignment policies -----------------------------------------------------
+
+def _assignment(graph: Graph, memo: MemoTable, part: Partition, mode: str,
+                params: CostParams, st: EnumStats) -> set[Point]:
+    if mode == "fa" or not part.points:
+        if mode == "gen" and not part.points:
+            st.plans_costed += 1
+        return set()                       # maximal fusion
+    if mode == "fnr":
+        # materialize every multi-consumer intermediate
+        mat = set(part.mat_points)
+        return {p for p in part.points if p[1] in mat}
+    q, _ = mp_skip_enum(graph, memo, part, params, stats=st)
+    return {p for p, v in zip(part.points, q) if v}
+
+
+# -- helpers -------------------------------------------------------------------
+
+def _topo_order(graph: Graph, specs: list) -> list:
+    pos = {n.nid: i for i, n in enumerate(graph.nodes)}
+    return sorted(specs, key=lambda s: pos[s.root])
+
+
+def _combine_multi_aggs(graph: Graph, specs: list,
+                        params: CostParams) -> list:
+    """Greedily merge MAgg fused ops sharing ≥1 input and a common main
+    shape into multi-output fused operators."""
+    groups: list[list[FusedOpSpec]] = []
+    rest: list = []
+    for s in specs:
+        if isinstance(s, FusedOpSpec) and s.ttype == TType.MAGG and s.fused:
+            placed = False
+            for g in groups:
+                if (set(g[0].inputs) & set(s.inputs)
+                        and _main_shape(graph, g[0]) == _main_shape(graph, s)
+                        and len(g) < 4):
+                    g.append(s)
+                    placed = True
+                    break
+            if not placed:
+                groups.append([s])
+        else:
+            rest.append(s)
+
+    out: list = list(rest)
+    for g in groups:
+        if len(g) == 1:
+            out.append(g[0])
+        else:
+            inputs: list[int] = []
+            for s in g:
+                for i in s.inputs:
+                    if i not in inputs:
+                        inputs.append(i)
+            out.append(MultiAggSpec([s.root for s in g], g, inputs))
+    return _topo_order(graph, out)
+
+
+def _main_shape(graph: Graph, spec: FusedOpSpec) -> tuple[int, int]:
+    shapes = [graph.by_id[i].shape for i in spec.inputs
+              if not graph.by_id[i].is_scalar]
+    if not shapes:
+        return (1, 1)
+    return max(shapes, key=lambda s: s[0] * s[1])

@@ -1,0 +1,7 @@
+"""Pallas TPU template-skeleton kernels + sparse/compressed formats.
+
+One module per paper template (cellwise/rowwise/multiagg/outerprod), each a
+``pl.pallas_call`` skeleton with explicit VMEM BlockSpecs; ``ops.py`` is the
+jit'd dispatch wrapper; ``ref.py`` the pure-jnp oracle every kernel is
+validated against.
+"""

@@ -1,0 +1,132 @@
+"""Pallas TPU skeleton for the **Cell** template (and single-output MAgg).
+
+Hardware adaptation of SystemML's SpoofCellwise: instead of a value-at-a-
+time virtual ``genexec``, the skeleton is a 2-D grid over MXU/VPU-aligned
+VMEM tiles; the generated operator (the CPlan program) is interpreted at
+trace time on tile values, emitting one fused kernel.  Aggregation variants
+accumulate across the reduction grid axis, which is laid out innermost so
+the output block stays resident in VMEM.
+
+Broadcast binding: (m,n) matrices tile as (bm,bn); (m,1)/(1,n) vectors ride
+along as (bm,1)/(1,bn) tiles; scalars as (1,1).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.cplan import (CPlan, COL_AGG, FULL_AGG, NO_AGG, ROW_AGG)
+from . import ref
+
+
+def pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` ≤ target (hardware path would mask
+    instead; divisibility keeps the validated kernels exact)."""
+    b = min(dim, target)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _tile_spec(shape, m, n, bm, bn, reduce_over_rows: bool):
+    """BlockSpec for a broadcast-compatible input of ``shape``; grid is
+    (outer, inner) where inner is the reduction axis."""
+    r, c = shape
+    if reduce_over_rows:     # grid = (n/bn, m/bm): o=col tile, i=row tile
+        ix_m, ix_n = (lambda o, i: i), (lambda o, i: o)
+    else:                    # grid = (m/bm, n/bn)
+        ix_m, ix_n = (lambda o, i: o), (lambda o, i: i)
+    if (r, c) == (1, 1):
+        return pl.BlockSpec((1, 1), lambda o, i: (0, 0))
+    if r == 1:
+        return pl.BlockSpec((1, bn), lambda o, i: (0, ix_n(o, i)))
+    if c == 1:
+        return pl.BlockSpec((bm, 1), lambda o, i: (ix_m(o, i), 0))
+    return pl.BlockSpec((bm, bn), lambda o, i: (ix_m(o, i), ix_n(o, i)))
+
+
+_INIT = {"sum": 0.0, "min": jnp.inf, "max": -jnp.inf, "mean": 0.0}
+_COMB = {"sum": jnp.add, "min": jnp.minimum, "max": jnp.maximum,
+         "mean": jnp.add}
+
+
+def cell_pallas(cplan: CPlan, env: dict[int, jnp.ndarray], *,
+                interpret: bool = False,
+                block: tuple[int, int] = (256, 512)) -> jnp.ndarray:
+    main = env[cplan.main.nid]
+    m, n = main.shape
+    bm, bn = pick_block(m, block[0]), pick_block(n, block[1])
+    variant, agg = cplan.variant, (cplan.agg_op or "sum")
+    reduce_rows = variant == COL_AGG      # reduce over m → rows innermost
+
+    binds = [b for b in cplan.binds]
+    arrays = [jnp.asarray(env[b.nid]) for b in binds]
+    dtype = arrays[0].dtype
+    in_specs = [_tile_spec(a.shape, m, n, bm, bn, reduce_rows)
+                for a in arrays]
+    nid_to_pos = {b.nid: i for i, b in enumerate(binds)}
+
+    if variant == NO_AGG:
+        grid = (m // bm, n // bn)
+        out_spec = pl.BlockSpec((bm, bn), lambda o, i: (o, i))
+        out_shape = (m, n)
+    elif variant == ROW_AGG:
+        grid = (m // bm, n // bn)
+        out_spec = pl.BlockSpec((bm, 1), lambda o, i: (o, 0))
+        out_shape = (m, 1)
+    elif variant == COL_AGG:
+        grid = (n // bn, m // bm)
+        out_spec = pl.BlockSpec((1, bn), lambda o, i: (0, o))
+        out_shape = (1, n)
+    elif variant == FULL_AGG:
+        grid = (m // bm, n // bn)
+        out_spec = pl.BlockSpec((1, 1), lambda o, i: (0, 0))
+        out_shape = (1, 1)
+    else:
+        raise NotImplementedError(variant)
+
+    def kernel(*refs):
+        *ins, out = refs
+        read = lambda nid: ins[nid_to_pos[nid]][...]
+        (val,) = ref.apply_program(cplan, read, [cplan.prog_root])
+        if variant == NO_AGG:
+            out[...] = val.astype(dtype)
+            return
+        if variant == ROW_AGG:
+            part = _reduce(val, agg, axis=1)
+        elif variant == COL_AGG:
+            part = _reduce(val, agg, axis=0)
+        else:
+            part = _reduce(val, agg, axis=None)
+        part = part.astype(dtype)
+        i = pl.program_id(1)
+        first = i == 0
+        if variant == FULL_AGG:
+            first = jnp.logical_and(pl.program_id(0) == 0, first)
+
+        @pl.when(first)
+        def _init():
+            out[...] = part
+
+        @pl.when(jnp.logical_not(first))
+        def _acc():
+            out[...] = _COMB[agg](out[...], part)
+
+    out = pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs, out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(out_shape, dtype),
+        interpret=interpret)(*arrays)
+    if agg == "mean":
+        count = {ROW_AGG: n, COL_AGG: m, FULL_AGG: m * n}.get(variant, 1)
+        out = out / count
+    return out
+
+
+def _reduce(val, agg: str, axis):
+    fn = {"sum": jnp.sum, "mean": jnp.sum,
+          "min": jnp.min, "max": jnp.max}[agg]
+    return fn(val, axis=axis, keepdims=True)

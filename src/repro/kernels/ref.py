@@ -1,0 +1,153 @@
+"""Pure-jnp oracle for CPlan programs and template skeletons.
+
+This module is the single source of truth for fused-operator semantics:
+
+* every Pallas kernel in this package is validated against these functions
+  (``tests/test_kernels_*``), and
+* the XLA execution path of generated operators *is* this module —
+  interpreting the CNode program at trace time emits one fused XLA
+  computation, which is the TPU-native analogue of SystemML's generated
+  janino operator when no custom kernel is warranted.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cplan import (CPlan, COL_AGG, COL_T_AGG, FULL_AGG, LEFT_MM,
+                              NO_AGG, RIGHT_MM, ROW_AGG)
+
+# --------------------------------------------------------------------------
+# basic-operation semantics (shared by program interpretation everywhere)
+# --------------------------------------------------------------------------
+
+_UNARY: dict[str, Callable] = {
+    "exp": jnp.exp, "log": jnp.log, "sqrt": jnp.sqrt, "abs": jnp.abs,
+    "sign": jnp.sign, "round": jnp.round, "floor": jnp.floor,
+    "ceil": jnp.ceil, "sigmoid": jax.nn.sigmoid, "tanh": jnp.tanh,
+    "relu": lambda x: jnp.maximum(x, 0), "neg": lambda x: -x,
+    "recip": lambda x: 1.0 / x, "pow2": lambda x: x * x,
+    "square": lambda x: x * x, "neq0": lambda x: (x != 0).astype(x.dtype),
+    "sprop": lambda x: x * (1 - x), "log1p": jnp.log1p,
+    "softplus": jax.nn.softplus, "gelu": jax.nn.gelu, "silu": jax.nn.silu,
+    "erf": jax.scipy.special.erf,
+}
+
+_BINARY: dict[str, Callable] = {
+    "add": jnp.add, "sub": jnp.subtract, "mul": jnp.multiply,
+    "div": jnp.divide, "min": jnp.minimum, "max": jnp.maximum,
+    "pow": jnp.power,
+    "eq": lambda a, b: (a == b), "neq": lambda a, b: (a != b),
+    "lt": lambda a, b: (a < b), "le": lambda a, b: (a <= b),
+    "gt": lambda a, b: (a > b), "ge": lambda a, b: (a >= b),
+}
+
+_CMP = {"eq", "neq", "lt", "le", "gt", "ge"}
+
+_AGG_FN = {"sum": jnp.sum, "min": jnp.min, "max": jnp.max,
+           "mean": jnp.mean, "sum_sq": lambda x, **kw: jnp.sum(x * x, **kw)}
+
+
+def eval_node(op: str, ins: Sequence, attrs: dict):
+    """Evaluate one IR operation on jnp values (used for basic operators
+    and inside program interpretation)."""
+    if op in _AGG_FN and "axis" in attrs:     # min/max are also binary ops
+        axis = attrs.get("axis", "full")
+        ax = {"full": None, "row": 1, "col": 0}[axis]
+        return jnp.asarray(_AGG_FN[op](ins[0], axis=ax, keepdims=True)
+                           ).reshape((1, 1) if ax is None else
+                                     ((-1, 1) if ax == 1 else (1, -1)))
+    if op in _UNARY:
+        return _UNARY[op](ins[0])
+    if op in _BINARY:
+        r = _BINARY[op](ins[0], ins[1])
+        if op in _CMP:
+            r = r.astype(jnp.result_type(ins[0]))
+        return r
+    if op == "where":
+        return jnp.where(ins[0] != 0, ins[1], ins[2])
+    if op == "plus_mult":
+        return ins[0] + ins[1] * ins[2]
+    if op == "minus_mult":
+        return ins[0] - ins[1] * ins[2]
+    if op == "matmul":
+        a, b = ins
+        ta, tb = attrs.get("ta", False), attrs.get("tb", False)
+        a = a.T if ta else a
+        b = b.T if tb else b
+        return a @ b
+    if op == "t":
+        return ins[0].T
+    if op == "idx":
+        return ins[0][:, attrs["lo"]:attrs["hi"]]
+    raise NotImplementedError(op)
+
+
+# --------------------------------------------------------------------------
+# program interpretation
+# --------------------------------------------------------------------------
+
+def apply_program(cplan: CPlan, read: Callable[[int], jnp.ndarray],
+                  roots: Sequence[int]) -> list:
+    """Interpret the CNode program; ``read(nid)`` supplies bound inputs.
+    Returns the values of the requested program roots."""
+    vals: dict[int, jnp.ndarray] = {}
+    for (nid, op, ins, _shape, attrs) in cplan.prog:
+        argv = []
+        for kind, ref in ins:
+            if kind == "n":
+                argv.append(vals[ref])
+            elif kind == "b":
+                argv.append(read(ref))
+            else:                          # literal
+                argv.append(ref)
+        vals[nid] = eval_node(op, argv, dict(attrs))
+    return [vals[r] if r in vals else read(r) for r in roots]
+
+
+def _agg(val, op: str, axis):
+    return _AGG_FN[op](val, axis=axis, keepdims=True)
+
+
+# --------------------------------------------------------------------------
+# dense skeleton references (the oracle per template variant)
+# --------------------------------------------------------------------------
+
+def execute_dense(cplan: CPlan, env: dict[int, jnp.ndarray]):
+    """Reference execution of a fused operator over dense inputs.
+    ``env`` maps bound nids to dense arrays.  Returns the output array
+    (or a (k,1) stack for multi-aggregates)."""
+    read = lambda nid: env[nid]
+
+    if cplan.extra:                       # multi-aggregate
+        roots = [cplan.prog_root] + [r for r, _ in cplan.extra]
+        ops = [cplan.agg_op] + [op for _, op in cplan.extra]
+        vals = apply_program(cplan, read, roots)
+        outs = [_agg(v, op, None).reshape(1, 1) for v, op in zip(vals, ops)]
+        return jnp.concatenate(outs, axis=0)
+
+    roots = [cplan.prog_root]
+    if cplan.close_nid is not None:
+        roots.append(cplan.close_nid)
+    vals = apply_program(cplan, read, roots)
+    val = vals[0]
+    closer = vals[1] if len(vals) > 1 else None
+    v = cplan.variant
+    if v == NO_AGG:
+        return val
+    if v == FULL_AGG:
+        return _agg(val, cplan.agg_op, None).reshape(1, 1)
+    if v == ROW_AGG:
+        return _agg(val, cplan.agg_op, 1).reshape(-1, 1)
+    if v == COL_AGG:
+        return _agg(val, cplan.agg_op, 0).reshape(1, -1)
+    if v == COL_T_AGG:
+        return closer.T @ val
+    if v == RIGHT_MM:
+        return val @ (closer.T if cplan.close_tb else closer)
+    if v == LEFT_MM:
+        return val.T @ closer
+    raise NotImplementedError(v)

@@ -1,0 +1,120 @@
+"""Pallas TPU skeleton for the **Row** template.
+
+SystemML's SpoofRowwise walks one row at a time with a ring buffer of row
+intermediates; on TPU the skeleton processes (bm × n) row *panels* resident
+in VMEM — row intermediates become panel registers, matvec chains become
+panel @ side MXU ops, and the ``col_t_agg`` close (Xᵀ·chain, the MLogreg
+pattern) accumulates a full (k×n') output block across the grid.
+
+Binding rules: the main input tiles as (bm, n); side inputs with m rows ride
+as (bm, k) panels; anything else (v, W, row vectors) stays fully resident.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.cplan import (CPlan, COL_AGG, COL_T_AGG, FULL_AGG, NO_AGG,
+                              ROW_AGG)
+from . import ref
+from .cellwise import pick_block, _COMB
+
+
+def row_pallas(cplan: CPlan, env: dict[int, jnp.ndarray], *,
+               interpret: bool = False, block_rows: int = 128) -> jnp.ndarray:
+    main = env[cplan.main.nid]
+    m, n = main.shape
+    bm = pick_block(m, block_rows)
+    variant, agg = cplan.variant, (cplan.agg_op or "sum")
+
+    binds = list(cplan.binds)
+    arrays = [jnp.asarray(env[b.nid]) for b in binds]
+    dtype = arrays[0].dtype
+    in_specs = []
+    for b, a in zip(binds, arrays):
+        r, c = a.shape
+        if b.nid == cplan.main.nid:
+            in_specs.append(pl.BlockSpec((bm, n), lambda i: (i, 0)))
+        elif r == m and m > 1:                 # row-aligned side panel
+            in_specs.append(pl.BlockSpec((bm, c), lambda i: (i, 0)))
+        else:                                  # fully-resident side input
+            in_specs.append(pl.BlockSpec((r, c), lambda i: (0, 0)))
+    nid_to_pos = {b.nid: i for i, b in enumerate(binds)}
+
+    roots = [cplan.prog_root]
+    if cplan.close_nid is not None:
+        roots.append(cplan.close_nid)
+
+    # output geometry
+    if variant == NO_AGG:
+        n_out = cplan.out_shape[1]
+        out_spec = pl.BlockSpec((bm, n_out), lambda i: (i, 0))
+        out_shape = (m, n_out)
+    elif variant == ROW_AGG:
+        out_spec = pl.BlockSpec((bm, 1), lambda i: (i, 0))
+        out_shape = (m, 1)
+    elif variant in (COL_AGG, FULL_AGG):
+        out_shape = (1, cplan.out_shape[1]) if variant == COL_AGG else (1, 1)
+        out_spec = pl.BlockSpec(out_shape, lambda i: (0, 0))
+    elif variant == COL_T_AGG:
+        out_shape = cplan.out_shape
+        out_spec = pl.BlockSpec(out_shape, lambda i: (0, 0))
+    else:
+        raise NotImplementedError(variant)
+
+    def kernel(*refs):
+        *ins, out = refs
+        read = lambda nid: ins[nid_to_pos[nid]][...]
+        vals = ref.apply_program(cplan, read, roots)
+        val = vals[0]
+        if variant == NO_AGG:
+            out[...] = val.astype(dtype)
+            return
+        if variant == ROW_AGG:
+            out[...] = _panel_reduce(val, agg, axis=1).astype(dtype)
+            return
+        if variant == COL_T_AGG:
+            closer = vals[1]
+            part = (closer.T @ val).astype(dtype)
+        elif variant == COL_AGG:
+            part = _panel_reduce(val, agg, axis=0).astype(dtype)
+        else:  # FULL_AGG
+            part = _panel_reduce(val, agg, axis=None).astype(dtype)
+        first = pl.program_id(0) == 0
+
+        @pl.when(first)
+        def _init():
+            out[...] = part
+
+        @pl.when(jnp.logical_not(first))
+        def _acc():
+            comb = jnp.add if variant == COL_T_AGG else _COMB[agg]
+            out[...] = comb(out[...], part)
+
+    out = pl.pallas_call(
+        kernel, grid=(m // bm,), in_specs=in_specs, out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(out_shape, dtype),
+        interpret=interpret)(*arrays)
+    if agg == "mean" and variant in (ROW_AGG, COL_AGG, FULL_AGG):
+        rr, rc = _root_shape(cplan)
+        count = {ROW_AGG: rc, COL_AGG: rr, FULL_AGG: rr * rc}[variant]
+        out = out / count
+    return out
+
+
+def _root_shape(cplan: CPlan) -> tuple[int, int]:
+    for (nid, _op, _ins, shape, _attrs) in cplan.prog:
+        if nid == cplan.prog_root:
+            return shape
+    for b in cplan.binds:
+        if b.nid == cplan.prog_root:
+            return b.shape
+    return cplan.main.shape
+
+
+def _panel_reduce(val, agg: str, axis):
+    fn = {"sum": jnp.sum, "mean": jnp.sum, "min": jnp.min,
+          "max": jnp.max}[agg]
+    return fn(val, axis=axis, keepdims=True)

@@ -1,0 +1,70 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: lower+compile the three chosen cells under each
+optimization variant on the production single-pod mesh, recording
+variant-tagged dry-run stats (and flop probes where compute changes).
+
+  PYTHONPATH=src python -m repro.launch.hillclimb
+"""
+
+import traceback
+
+CELLS = {
+    # (arch, shape): [(variant_tag, variant_dict), ...]
+    ("yi-34b", "prefill_32k"): [
+        ("actdp", {"act": "dp"}),
+        ("actsp", {"act": "sp"}),
+        ("actdp-servep", {"act": "dp", "serve_params": True}),
+    ],
+    ("grok-1-314b", "train_4k"): [
+        ("actdp", {"act": "dp"}),
+        ("actdp-capmoe", {"act": "dp", "moe_impl": "capacity"}),
+    ],
+    ("olmoe-1b-7b", "train_4k"): [
+        ("actdp", {"act": "dp"}),
+        ("actdp-capmoe", {"act": "dp", "moe_impl": "capacity"}),
+        ("actdp-fusedloss", {"act": "dp", "fusion": "gen"}),
+    ],
+    # bonus: decode memory/collective lever
+    ("yi-34b", "decode_32k"): [
+        ("servep", {"serve_params": True}),
+        ("servep-gqagrp", {"serve_params": True, "gqa_grouped": True}),
+    ],
+}
+
+#: variants whose FLOPs/bytes change (need probes, run separately under a
+#: small device count): (arch, shape, tag, variant)
+PROBE_VARIANTS = [
+    ("grok-1-314b", "train_4k", "capmoe", {"moe_impl": "capacity"}),
+    ("olmoe-1b-7b", "train_4k", "capmoe", {"moe_impl": "capacity"}),
+    ("yi-34b", "decode_32k", "gqagrp", {"gqa_grouped": True}),
+]
+
+
+def main() -> None:
+    from repro.launch.dryrun_lib import run_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=False)
+    for (arch, shape), variants in CELLS.items():
+        for tag, variant in variants:
+            try:
+                fusion = variant.get("fusion", "off")
+                rec = run_cell(arch, shape, mesh, "pod16x16",
+                               fusion=fusion, variant=variant,
+                               variant_tag=tag)
+                coll = rec["collective_bytes_per_device_trip_corrected"]
+                print(f"OK   {arch} × {shape} [{tag}]: "
+                      f"coll/dev={coll['total']:.3e} "
+                      f"rawflops={rec['flops_per_device']:.3e} "
+                      f"rawbytes={rec['bytes_per_device']:.3e}",
+                      flush=True)
+            except Exception as e:
+                print(f"FAIL {arch} × {shape} [{tag}]: "
+                      f"{type(e).__name__}: {e}", flush=True)
+                traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Serving step factories: prefill and single-token decode (the functions
+the decode_*/long_* dry-run cells lower), plus a simple batched engine.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import LM
+from repro.models.lm import N_PATCHES
+
+
+def make_prefill_step(model: LM, cfg: ModelConfig):
+    def prefill_step(params, tokens, cache, prefix_emb=None):
+        logits, cache, _ = model.apply(params, tokens,
+                                       prefix_emb=prefix_emb, caches=cache)
+        return logits[:, -1:], cache
+    return prefill_step
+
+
+def make_serve_step(model: LM, cfg: ModelConfig):
+    """One new token against a populated KV cache — the roofline unit for
+    decode shapes."""
+    def serve_step(params, cache, token, pos):
+        logits, cache = model.decode_step(params, cache, token, pos)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+    return serve_step
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.frontend == "vision":
+        S = S - N_PATCHES
+    tok_shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, S)
+    specs = {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
+    if cfg.frontend == "vision":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (B, N_PATCHES, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig):
+    B = shape.global_batch
+    tok_shape = (B, 1, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, 1)
+    return {"token": jax.ShapeDtypeStruct(tok_shape, jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def cache_specs_abstract(model: LM, shape: ShapeConfig):
+    """ShapeDtypeStruct tree of the decode cache (no allocation)."""
+    cache = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    return cache

@@ -1,0 +1,1 @@
+from .lm import LM, LayerSpec, build_pattern, lm_loss

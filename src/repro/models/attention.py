@@ -1,0 +1,193 @@
+"""GQA attention with RoPE, causal/sliding-window masking, KV cache."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (B, S, H, hd); positions: (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def attn_params(key, cfg: ModelConfig, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": jax.random.normal(kq, (d, cfg.n_heads * hd), dtype) * s,
+        "wk": jax.random.normal(kk, (d, cfg.n_kv_heads * hd), dtype) * s,
+        "wv": jax.random.normal(kv, (d, cfg.n_kv_heads * hd), dtype) * s,
+        "wo": jax.random.normal(ko, (cfg.n_heads * hd, d), dtype)
+        * (cfg.n_heads * hd) ** -0.5,
+    }
+
+
+def _mask(q_pos, k_pos, window: int):
+    """causal (+ sliding window) mask: (B, Sq, Sk) bool keep."""
+    keep = k_pos[:, None, :] <= q_pos[:, :, None]
+    if window:
+        keep &= k_pos[:, None, :] > q_pos[:, :, None] - window
+    return keep
+
+
+def attention(x: jnp.ndarray, p: dict, cfg: ModelConfig, *,
+              positions: jnp.ndarray, window: int = 0,
+              cache: Optional[dict] = None):
+    """Full-sequence attention (train/prefill).  Returns (out, new_cache):
+    when ``cache`` is given (prefill), K/V are written into it.
+
+    When ``cfg.attn_chunk`` divides the sequence, scores are computed
+    chunk-at-a-time with an online softmax (flash-attention structure) so
+    the S×S matrix never materializes — the memory-roofline fix for 32k+
+    contexts."""
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    from repro.dist.sharding import constrain
+    q = constrain((x @ p["wq"]).reshape(B, S, H, hd), "bthd")
+    k = constrain((x @ p["wk"]).reshape(B, S, KV, hd), "bthd")
+    v = constrain((x @ p["wv"]).reshape(B, S, KV, hd), "bthd")
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    rep = H // KV
+    kq = jnp.repeat(k, rep, axis=2)
+    vq = jnp.repeat(v, rep, axis=2)
+    C = cfg.attn_chunk
+    if C and S > C and S % C == 0:
+        out = _chunked_attention(q, kq, vq, positions, window)
+    else:
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kq,
+                            preferred_element_type=jnp.float32) * hd ** -0.5
+        keep = _mask(positions, positions, window)[:, None]
+        scores = jnp.where(keep, scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", w, vq)
+    out = out.reshape(B, S, H * hd) @ p["wo"]
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0)),
+        }
+    return out, new_cache
+
+
+def _chunked_attention(q, k, v, positions, window: int):
+    """Online-softmax attention over KV chunks (flash structure).
+
+    q,k,v: (B, S, H, hd); causal (+ optional sliding window).  Each chunk
+    step is rematerialized in the backward pass (the flash recompute),
+    bounding train-time residuals to O(S·C) per layer."""
+    B, S, H, hd = q.shape
+    C = _chunk_of(S)
+    scale = hd ** -0.5
+    n_chunks = S // C
+    kc = k.reshape(B, n_chunks, C, H, hd)
+    vc = v.reshape(B, n_chunks, C, H, hd)
+    pc = positions.reshape(B, n_chunks, C)
+
+    def body(carry, chunk):
+        m, l, acc = carry
+        kj, vj, pj, j = chunk
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kj,
+                       preferred_element_type=jnp.float32) * scale
+        keep = pj[:, None, :] <= positions[:, :, None]
+        if window:
+            keep &= pj[:, None, :] > positions[:, :, None] - window
+        s = jnp.where(keep[:, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p_ = jnp.exp(s - m_safe[..., None])
+        p_ = jnp.where(keep[:, None], p_, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p_, axis=-1)
+        acc_new = acc * corr[..., None] \
+            + jnp.einsum("bhqk,bkhd->bhqd", p_.astype(vj.dtype), vj
+                         ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((B, H, S), -jnp.inf, jnp.float32),
+            jnp.zeros((B, H, S), jnp.float32),
+            jnp.zeros((B, H, S, hd), jnp.float32))
+    xs = (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+          jnp.moveaxis(pc, 1, 0), jnp.arange(n_chunks))
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), init, xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)     # (B, S, H, hd)
+
+
+def _chunk_of(S: int, target: int = 1024) -> int:
+    c = min(S, target)
+    while S % c:
+        c -= 1
+    return c
+
+
+def decode_attention(x: jnp.ndarray, p: dict, cfg: ModelConfig, *,
+                     cache: dict, pos: jnp.ndarray, window: int = 0):
+    """Single-token attention against the KV cache.
+    x: (B, 1, d); pos: scalar int32 (current position).  Returns
+    (out (B,1,d), updated cache).
+
+    ``cfg.gqa_grouped`` computes scores with the grouped-head einsum —
+    the KV cache is read once instead of materializing an H/KV× repeated
+    copy (the §Perf memory-term optimization for GQA decode)."""
+    B, S1, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    S = cache["k"].shape[1]
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    q = rope((x @ p["wq"]).reshape(B, 1, H, hd), posb, cfg.rope_theta)
+    k = rope((x @ p["wk"]).reshape(B, 1, KV, hd), posb, cfg.rope_theta)
+    v = (x @ p["wv"]).reshape(B, 1, KV, hd)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+
+    k_pos = jnp.arange(S, dtype=jnp.int32)
+    keep = k_pos <= pos
+    if window:
+        keep &= k_pos > pos - window
+
+    rep = H // KV
+    if cfg.gqa_grouped and rep > 1:
+        qg = q.reshape(B, 1, KV, rep, hd)
+        scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, ck,
+                            preferred_element_type=jnp.float32) * hd ** -0.5
+        scores = jnp.where(keep[None, None, None, None, :], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bgrqk,bkgd->bqgrd", w, cv)
+        out = out.reshape(B, 1, H * hd) @ p["wo"]
+        return out, {"k": ck, "v": cv}
+
+    kq = jnp.repeat(ck, rep, axis=2)          # (B, S, H, hd)
+    vq = jnp.repeat(cv, rep, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kq,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    scores = jnp.where(keep[None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vq)
+    out = out.reshape(B, 1, H * hd) @ p["wo"]
+    return out, {"k": ck, "v": cv}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    hd = cfg.hd
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+    }

@@ -1,0 +1,70 @@
+"""Shared model layers: norms, MLPs, embeddings — pure JAX.
+
+Where marked, the elementwise/normalization chains are first-class fusion
+sites for the paper's planner (`repro.core`): the train driver can route
+them through ``@fused`` (Cell/Row templates); the default path is plain
+jnp, which XLA fuses — both execute identical CNode programs.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def norm(x: jnp.ndarray, scale: jnp.ndarray, kind: str = "rmsnorm",
+         bias: Optional[jnp.ndarray] = None, eps: float = 1e-6):
+    """Row-template chain: per-row second-moment + scale."""
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * (1.0 + scale.astype(jnp.float32))
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) \
+            * scale.astype(jnp.float32)
+        if bias is not None:
+            out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def mlp(x: jnp.ndarray, p: dict, kind: str) -> jnp.ndarray:
+    """Dense MLP; the activation chain is a Cell-template fusion site."""
+    from repro.dist.sharding import constrain
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+        h = constrain(act(x @ p["w1"]) * (x @ p["w3"]), "btf")
+        return h @ p["w2"]
+    if kind == "gelu":
+        return constrain(jax.nn.gelu(x @ p["w1"]), "btf") @ p["w2"]
+    if kind == "relu2":
+        h = jnp.maximum(x @ p["w1"], 0.0)
+        return constrain(h * h, "btf") @ p["w2"]
+    raise ValueError(kind)
+
+
+def mlp_params(key, cfg: ModelConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    p = {"w1": jax.random.normal(k1, (d, f), dtype) * s_in,
+         "w2": jax.random.normal(k2, (f, d), dtype) * s_out}
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        p["w3"] = jax.random.normal(k3, (d, f), dtype) * s_in
+    return p
+
+
+def norm_params(cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(x, p, cfg: ModelConfig):
+    return norm(x, p["scale"], cfg.norm_type, p.get("bias"))

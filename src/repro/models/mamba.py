@@ -1,0 +1,121 @@
+"""Mamba selective-SSM layer (Jamba's recurrent block).
+
+Training/prefill run the selective scan with ``lax.scan`` over sequence
+chunks (compact HLO, O(L) work); decode is a single O(1) state update.
+The paper's fusion templates do not apply to the loop-carried recurrence
+itself (DESIGN.md §6) — but the gate/projection chains around it are
+standard Cell fusion sites.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def mamba_params(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    N, K = cfg.ssm_state, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    si = di ** -0.5
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (K, di), dtype) * 0.1,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": jax.random.normal(ks[2], (di, 2 * N + 1), dtype) * si,
+        "dt_bias": jnp.zeros((di,), dtype),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (di, N)).astype(dtype)),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": jax.random.normal(ks[3], (di, d), dtype) * si,
+    }
+
+
+def _ssm_step(h, inputs):
+    """h: (B, di, N); one selective-scan step."""
+    dA, dBx, C = inputs                       # (B,di,N), (B,di,N), (B,N)
+    h = h * dA + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C)
+    return h, y
+
+
+def _selective_scan(u, dt, B_, C_, A, h0):
+    """u, dt: (B, L, di); B_, C_: (B, L, N); A: (di, N); h0: (B, di, N).
+    Returns (y (B, L, di), hL)."""
+    dA = jnp.exp(dt[..., None] * A)                       # (B,L,di,N)
+    dBx = dt[..., None] * B_[:, :, None, :] * u[..., None]
+
+    def step(h, xs):
+        return _ssm_step(h, xs)
+
+    xs = (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBx, 1, 0),
+          jnp.moveaxis(C_, 1, 0))
+    hL, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), hL
+
+
+def mamba(x: jnp.ndarray, p: dict, cfg: ModelConfig, *,
+          state: dict | None = None):
+    """Full-sequence Mamba.  x: (B, L, d).  Returns (out, new_state)."""
+    B, L, d = x.shape
+    di = cfg.ssm_expand * d
+    N, K = cfg.ssm_state, cfg.ssm_conv
+    xz = x @ p["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)                      # (B, L, di)
+    # causal depthwise conv
+    pad = jnp.zeros((B, K - 1, di), u.dtype)
+    uc = jnp.concatenate([pad, u], axis=1)
+    u = sum(uc[:, i:i + L] * p["conv_w"][i] for i in range(K)) + p["conv_b"]
+    u = jax.nn.silu(u)
+    # input-dependent SSM parameters
+    xdbc = u @ p["x_proj"]                                # (B, L, 2N+1)
+    B_ = xdbc[..., :N].astype(jnp.float32)
+    C_ = xdbc[..., N:2 * N].astype(jnp.float32)
+    dt = jax.nn.softplus(xdbc[..., 2 * N:] + p["dt_bias"][None, None, -1]
+                         ).astype(jnp.float32)            # (B, L, 1)
+    dt = jnp.broadcast_to(dt, (B, L, di))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((B, di, N), jnp.float32))
+    y, hL = _selective_scan(u.astype(jnp.float32), dt, B_, C_, A, h0)
+    y = y.astype(x.dtype) + u * p["D"]
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    # conv state: the last K-1 *raw* inputs (uc = [pad(K-1), u_raw(L)])
+    new_state = ({"h": hL, "conv": uc[:, L:]}
+                 if state is not None else None)
+    return out, new_state
+
+
+def mamba_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig, state: dict):
+    """One-token Mamba step.  x: (B, 1, d); state: {h (B,di,N),
+    conv (B, K-1, di)}."""
+    B, _, d = x.shape
+    di = cfg.ssm_expand * d
+    N, K = cfg.ssm_state, cfg.ssm_conv
+    xz = x[:, 0] @ p["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)                      # (B, di)
+    conv_buf = jnp.concatenate([state["conv"], u[:, None]], axis=1)
+    u = sum(conv_buf[:, i] * p["conv_w"][i] for i in range(K)) + p["conv_b"]
+    u = jax.nn.silu(u)
+    xdbc = u @ p["x_proj"]
+    B_ = xdbc[..., :N].astype(jnp.float32)
+    C_ = xdbc[..., N:2 * N].astype(jnp.float32)
+    dt = jax.nn.softplus(xdbc[..., 2 * N:] + p["dt_bias"][None, -1]
+                         ).astype(jnp.float32)
+    dt = jnp.broadcast_to(dt, (B, di))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    h = state["h"] * jnp.exp(dt[..., None] * A) \
+        + dt[..., None] * B_[:, None, :] * u.astype(jnp.float32)[..., None]
+    y = jnp.einsum("bdn,bn->bd", h, C_).astype(x.dtype) + u * p["D"]
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out[:, None], {"h": h, "conv": conv_buf[:, 1:]}
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype):
+    di = cfg.ssm_expand * cfg.d_model
+    return {"h": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype)}

@@ -1,0 +1,95 @@
+"""xLSTM (mLSTM) block — matrix-memory recurrent cell with exponential
+gating and stabilizer state (arXiv:2405.04517).
+
+Train/prefill: ``lax.scan`` over time; decode: O(1) state update per
+token.  State per head: C (hd×hd) matrix memory, n (hd) normalizer,
+m (scalar) stabilizer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def xlstm_params(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    ks = jax.random.split(key, 6)
+    s, si = d ** -0.5, di ** -0.5
+    H = cfg.n_heads
+    return {
+        "up": jax.random.normal(ks[0], (d, 2 * di), dtype) * s,
+        "wq": jax.random.normal(ks[1], (di, di), dtype) * si,
+        "wk": jax.random.normal(ks[2], (di, di), dtype) * si,
+        "wv": jax.random.normal(ks[3], (di, di), dtype) * si,
+        "wif": jax.random.normal(ks[4], (di, 2 * H), dtype) * si,
+        "down": jax.random.normal(ks[5], (di, d), dtype) * si,
+    }
+
+
+def _cell_step(state, inputs):
+    """state: (C (B,H,hd,hd), n (B,H,hd), m (B,H));
+    inputs: q,k,v (B,H,hd), i,f pre-activations (B,H)."""
+    C, n, m = state
+    q, k, v, ipre, fpre = inputs
+    logf = -jax.nn.softplus(-fpre)                 # log sigmoid(f)
+    m_new = jnp.maximum(logf + m, ipre)
+    i_g = jnp.exp(ipre - m_new)[..., None]
+    f_g = jnp.exp(logf + m - m_new)[..., None]
+    C = f_g[..., None] * C + i_g[..., None] * (v[..., :, None]
+                                               * k[..., None, :])
+    n = f_g * n + i_g * k
+    h_num = jnp.einsum("bhij,bhj->bhi", C, q)
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q)),
+                        jnp.exp(-m_new))[..., None]
+    h = h_num / h_den
+    return (C, n, m_new), h
+
+
+def mlstm(x: jnp.ndarray, p: dict, cfg: ModelConfig, *,
+          state=None):
+    """x: (B, L, d) → (B, L, d); returns (out, final_state)."""
+    B, L, d = x.shape
+    di = cfg.ssm_expand * d
+    H = cfg.n_heads
+    hd = di // H
+    xz = x @ p["up"]
+    u, z = jnp.split(xz, 2, axis=-1)               # (B, L, di)
+    q = (u @ p["wq"]).reshape(B, L, H, hd) * hd ** -0.5
+    k = (u @ p["wk"]).reshape(B, L, H, hd) * hd ** -0.5
+    v = (u @ p["wv"]).reshape(B, L, H, hd)
+    gif = (u @ p["wif"]).astype(jnp.float32)       # (B, L, 2H)
+    ipre, fpre = gif[..., :H], gif[..., H:]
+
+    if state is None:
+        st = (jnp.zeros((B, H, hd, hd), jnp.float32),
+              jnp.zeros((B, H, hd), jnp.float32),
+              jnp.zeros((B, H), jnp.float32))
+    else:
+        st = (state["C"], state["n"], state["m"])
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+               for a in (q, k, v)) + (jnp.moveaxis(ipre, 1, 0),
+                                      jnp.moveaxis(fpre, 1, 0))
+    stL, hs = jax.lax.scan(_cell_step, st, xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, L, di).astype(x.dtype)
+    out = (h * jax.nn.silu(z)) @ p["down"]
+    new_state = ({"C": stL[0], "n": stL[1], "m": stL[2]}
+                 if state is not None else None)
+    return out, new_state
+
+
+def mlstm_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig, state: dict):
+    out, st = mlstm(x, p, cfg, state=state)
+    return out, st
+
+
+def init_xlstm_state(cfg: ModelConfig, batch: int):
+    di = cfg.ssm_expand * cfg.d_model
+    H = cfg.n_heads
+    hd = di // H
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.zeros((batch, H), jnp.float32)}

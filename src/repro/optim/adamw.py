@@ -1,0 +1,85 @@
+"""AdamW with fully-sharded state, bf16-state option, global-norm clipping.
+
+State shards exactly like the parameters (same PartitionSpec tree), so
+optimizer memory scales 1/N with the mesh — the ZeRO-3/FSDP layout.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    state_dtype: str = "float32"      # bf16 halves optimizer memory
+
+
+def schedule(step, cfg: OptConfig):
+    """Linear warmup + cosine decay."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+                 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) \
+        * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def init(params, cfg: OptConfig):
+    dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def update(grads, state, params, cfg: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = schedule(count, cfg)
+    b1, b2 = cfg.b1, cfg.b2
+    c = count.astype(jnp.float32)
+    bc1 = 1 - b1 ** c
+    bc2 = 1 - b2 ** c
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g * g
+        step = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * step
+        return newp.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat = jax.tree_util.tree_map(upd, params, grads, state["m"],
+                                  state["v"])
+    new_params = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,126 @@
+"""Batched serving engine: prefill + decode with a shared KV cache pool.
+
+Single-host reference implementation of the production loop: fixed-size
+batch slots, greedy/temperature sampling, per-slot stop handling, and a
+continuous-batching admission queue (new requests fill freed slots at
+step boundaries).  The jitted inner steps are the same functions the
+dry-run lowers for the decode_*/long_* cells.
+"""
+
+from __future__ import annotations
+
+import queue
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch.serve import make_prefill_step, make_serve_step
+from repro.models import LM
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray               # (P,) int32
+    max_new: int = 16
+    temperature: float = 0.0
+    out: list = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
+                 max_len: int = 512, seed: int = 0):
+        self.cfg = cfg
+        self.model = LM(cfg)
+        self.params = params
+        self.max_len = max_len
+        self.slots: list[Optional[Request]] = [None] * batch_slots
+        self.pos = np.zeros(batch_slots, np.int32)
+        self.cache = self.model.init_cache(batch_slots, max_len)
+        self._prefill = jax.jit(make_prefill_step(self.model, cfg))
+        self._decode = jax.jit(make_serve_step(self.model, cfg))
+        self._queue: "queue.Queue[Request]" = queue.Queue()
+        self._key = jax.random.PRNGKey(seed)
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self._queue.put(req)
+
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot is not None or self._queue.empty():
+                continue
+            req = self._queue.get()
+            self.slots[i] = req
+            P = len(req.prompt)
+            # prefill this slot (batch-1 prefill into slot i's cache rows)
+            toks = jnp.asarray(req.prompt, jnp.int32)[None]
+            sub_cache = jax.tree_util.tree_map(
+                lambda c: c[:, i:i + 1] if c.ndim > 1 else c, self.cache,
+                is_leaf=lambda x: hasattr(x, "ndim"))
+            sub_model_cache = self._slot_cache(i)
+            _, new_cache = self._prefill(self.params, toks, sub_model_cache)
+            self._write_slot_cache(i, new_cache)
+            self.pos[i] = P
+
+    def _slot_cache(self, i: int):
+        def slot(leaf):
+            # batch dim is axis 1 for stacked (G, B, ...) leaves, else 0
+            ax = 1 if leaf.ndim >= 2 and leaf.shape[0] == self._groups() \
+                else 0
+            return jax.lax.dynamic_slice_in_dim(leaf, i, 1, axis=ax)
+        return jax.tree_util.tree_map(slot, self.cache)
+
+    def _write_slot_cache(self, i: int, sub) -> None:
+        def write(full, part):
+            ax = 1 if full.ndim >= 2 and full.shape[0] == self._groups() \
+                else 0
+            return jax.lax.dynamic_update_slice_in_dim(full, part, i,
+                                                       axis=ax)
+        self.cache = jax.tree_util.tree_map(write, self.cache, sub)
+
+    def _groups(self) -> int:
+        return self.model.n_groups
+
+    # -- stepping ------------------------------------------------------------
+    def step(self) -> None:
+        """One decode step for every occupied slot (continuous batching:
+        admission happens between steps)."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return
+        last = np.zeros((len(self.slots), 1), np.int32)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            prev = s.out[-1] if s.out else s.prompt[-1]
+            last[i, 0] = prev
+        # decode advances every slot at its own position: step per slot
+        for i in active:
+            req = self.slots[i]
+            tok = jnp.asarray(last[i:i + 1], jnp.int32)
+            sub = self._slot_cache(i)
+            nxt, logits, sub = self._decode(self.params, sub, tok,
+                                            int(self.pos[i]))
+            self._write_slot_cache(i, sub)
+            if req.temperature > 0:
+                self._key, k = jax.random.split(self._key)
+                nxt = jax.random.categorical(
+                    k, logits[:, -1] / req.temperature)[None]
+            tok_out = int(np.asarray(nxt).reshape(-1)[0])
+            req.out.append(tok_out)
+            self.pos[i] += 1
+            if len(req.out) >= req.max_new or self.pos[i] >= self.max_len - 1:
+                req.done = True
+                self.slots[i] = None
+
+    def run_until_done(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if self._queue.empty() and all(s is None for s in self.slots):
+                return
+            self.step()

@@ -1,0 +1,1 @@
+from .loop import LoopConfig, LoopState, resume, run_loop

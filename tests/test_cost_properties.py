@@ -1,0 +1,89 @@
+"""Property tests for the analytical cost model (paper Eq. 4)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ir
+from repro.core.cost import (CostParams, TPU_V5E, mp_cost, node_bytes,
+                             node_flops, partition_cost, spec_cost,
+                             static_lower_bound)
+from repro.core.explore import explore
+from repro.core.partitions import build_partitions
+from repro.core.select import plan
+
+
+def test_node_flops_matmul_and_cell():
+    X = ir.matrix("X", (100, 50))
+    Y = ir.matrix("Y", (50, 20))
+    mm = (X @ Y).node
+    assert node_flops(mm) == 2 * 100 * 50 * 20
+    assert node_flops((X * 2.0).node) == 100 * 50
+    assert node_flops(ir.exp(X).node) == 100 * 50 * 16   # transcendental
+
+
+def test_node_bytes_sparse_vs_dense():
+    d = ir.matrix("D", (1000, 1000)).node
+    s = ir.matrix("S", (1000, 1000), sparsity=0.01).node
+    assert node_bytes(s, TPU_V5E) < node_bytes(d, TPU_V5E)
+    assert node_bytes(s, TPU_V5E) == pytest.approx(1e6 * 0.01 * 8)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.001, 0.2))
+def test_outer_cost_monotone_in_sparsity(sp):
+    """Sparsity-exploiting plans get monotonically cheaper with sparsity
+    (within the sparse-format regime — near-dense, sparse storage
+    legitimately costs more than dense, as in SystemML's format switch)."""
+    def cost_at(s):
+        X = ir.matrix("X", (10000, 10000), sparsity=s)
+        U = ir.matrix("U", (10000, 32))
+        V = ir.matrix("V", (10000, 32))
+        g = ir.Graph.build([(ir.neq0(X) * (U @ V.T)) @ V])
+        return plan(g, "gen").cost
+    assert cost_at(sp) <= cost_at(min(0.4, sp * 2)) + 1e-12
+
+
+def test_lower_bound_below_all_assignments():
+    """C̲ must lower-bound every assignment's true cost (the soundness
+    condition for cost-based pruning)."""
+    import itertools
+    X = ir.matrix("X", (5000, 200))
+    m = ir.exp(X)
+    g = ir.Graph.build([(m * 2.0).sum(), (m + 1.0).rowsums(), m])
+    memo = explore(g)
+    for part in build_partitions(g, memo):
+        lb = static_lower_bound(g, memo, part, TPU_V5E)
+        written = frozenset(set(part.roots) | part.exits)
+        for bits in itertools.product([False, True],
+                                      repeat=len(part.points)):
+            banned = {p for p, b in zip(part.points, bits) if b}
+            c = partition_cost(g, memo, part, banned, TPU_V5E)
+            assert lb + mp_cost(g, banned, TPU_V5E, written) <= c + 1e-15
+
+
+def test_distributed_reads_cost_more():
+    """Side inputs priced at ICI must raise plan costs (never lower)."""
+    X = ir.matrix("X", (1_000_000, 100))
+    w = ir.matrix("w", (100, 1))
+    y = ir.matrix("y", (1_000_000, 1))
+    g = ir.Graph.build([(ir.relu(1.0 - y * (X @ w)) ** 2).sum()])
+    local = plan(g, "gen").cost
+    slow = CostParams(input_read_bw={y.node.nid: 50e9, w.node.nid: 50e9})
+    dist = plan(g, "gen", slow).cost
+    assert dist >= local
+
+
+def test_constraint_violation_infinite():
+    from repro.core.cost import FusedOpSpec
+    from repro.core.templates import TType
+    X = ir.matrix("X", (10, 10))
+    g = ir.Graph.build([(X * 2.0).sum()])
+    agg = g.outputs[0]
+    mul = agg.inputs[0]
+    spec = FusedOpSpec(agg.nid, TType.CELL,
+                       {agg.nid: None, mul.nid: None},   # fused (2 ops)
+                       inputs=list(range(100)))          # too many inputs
+    params = CostParams(max_fused_inputs=12)
+    assert spec_cost(g, spec, params) == math.inf

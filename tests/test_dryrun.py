@@ -1,0 +1,85 @@
+"""Dry-run machinery tests (small host-device mesh via subprocess for
+device-count isolation) + HLO parsing units."""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def test_collective_parse_units():
+    from repro.launch.costing import _result_bytes, trip_count, parse_hlo
+    assert _result_bytes(" f32[8,64]{1,0} ") == 8 * 64 * 4
+    assert _result_bytes(" (bf16[4,4], f32[2]) ") == 32 + 8
+    hlo = textwrap.dedent("""\
+        %cond (p: (s32[])) -> pred[] {
+          %c = s32[] constant(7)
+          ROOT %r = pred[] compare(%c, %c), direction=LT
+        }
+        ENTRY %main (p: f32[4]) -> f32[4] {
+          ROOT %out = f32[4] add(%p, %p)
+        }
+        """)
+    comps = parse_hlo(hlo)
+    assert "%cond" in comps and "%main" in comps
+    assert trip_count(comps, "%cond") == 7
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess(tmp_path):
+    """One full lower+compile on an 8-device host mesh — validates the
+    whole dry-run path (shardings, specs, stats extraction)."""
+    code = textwrap.dedent("""\
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json, sys
+        sys.path.insert(0, r"%s")
+        import jax
+        from repro.launch.dryrun_lib import run_cell
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        rec = run_cell("xlstm-1.3b", "decode_32k", mesh, "test4x2",
+                       save=False)
+        assert rec["flops_per_device"] > 0
+        assert rec["memory"]["argument_bytes"] > 0
+        assert rec["collective_bytes_per_device_trip_corrected"]["total"] \\
+            >= rec["collective_bytes_per_device"]["total"]
+        print("CELL_OK", rec["flops_per_device"])
+        """) % (REPO / "src")
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True, timeout=600)
+    assert "CELL_OK" in out.stdout, out.stderr[-2000:]
+
+
+def test_all_40_cells_accounted():
+    """33 live cells + 7 documented long_500k skips = the assigned 40."""
+    from repro.configs import SHAPES, all_configs, applicable, cells
+    cfgs = all_configs()
+    live = cells(cfgs)
+    assert len(cfgs) == 10 and len(SHAPES) == 4
+    skips = [(a, s.name) for a in cfgs for s in SHAPES.values()
+             if not applicable(cfgs[a], s)]
+    assert len(live) + len(skips) == 40
+    assert all(s == "long_500k" for _, s in skips)
+    skipped_archs = {a for a, _ in skips}
+    assert skipped_archs == {"grok-1-314b", "olmoe-1b-7b", "yi-34b",
+                             "minitron-4b", "starcoder2-7b",
+                             "llava-next-34b", "musicgen-large"}
+
+
+def test_roofline_math():
+    from repro.launch.roofline import analyze, PEAK_FLOPS, HBM_BW, ICI_BW
+    rec = {"arch": "yi-34b", "shape": "train_4k", "mesh": "x",
+           "devices": 256,
+           "flops_per_device": 1e15, "bytes_per_device": 1e12,
+           "collective_bytes_per_device": {"total": 1e11},
+           "collective_bytes_per_device_trip_corrected": {"total": 2e11}}
+    out = analyze(rec)
+    assert out["terms"]["collective"] == pytest.approx(2e11 / ICI_BW)
+    assert out["dominant"] in ("compute", "memory", "collective")
+    assert out["model_flops"] > 0

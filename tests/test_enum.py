@@ -1,0 +1,137 @@
+"""MPSkipEnum (Algorithm 2): optimality vs brute force + pruning stats.
+
+Property-based: random DAGs with shared intermediates; the pruned, cut-set-
+decomposed enumeration must return exactly the brute-force optimal cost.
+"""
+
+import itertools
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ir
+from repro.core.cost import TPU_V5E, partition_cost
+from repro.core.enumerate import EnumStats, find_cut_sets, mp_skip_enum
+from repro.core.explore import explore
+from repro.core.partitions import build_partitions
+
+
+def brute_force(graph, memo, part, params=TPU_V5E):
+    n = len(part.points)
+    best = math.inf
+    for bits in itertools.product([False, True], repeat=n):
+        banned = {p for p, b in zip(part.points, bits) if b}
+        best = min(best, partition_cost(graph, memo, part, banned, params))
+    return best
+
+
+def _check_graph(g):
+    memo = explore(g)
+    for part in build_partitions(g, memo):
+        if len(part.points) > 10:
+            continue
+        st_ = EnumStats()
+        q, c = mp_skip_enum(g, memo, part, TPU_V5E, stats=st_)
+        bf = brute_force(g, memo, part)
+        assert c == pytest.approx(bf, rel=1e-9), (c, bf, part.points)
+        # sanity: pruning + cut-set recursion stays near the full space
+        assert st_.plans_costed <= 2 * 2 ** len(part.points)
+
+
+def test_mlogreg_optimal():
+    X = ir.matrix("X", (10000, 100))
+    v = ir.matrix("v", (100, 4))
+    P = ir.matrix("P", (10000, 5))
+    Pk = P.cols(0, 4)
+    Q = Pk * (X @ v)
+    H = X.T @ (Q - Pk * Q.rowsums())
+    _check_graph(ir.Graph.build([H]))
+
+
+def test_als_optimal():
+    X = ir.matrix("X", (20000, 20000), sparsity=0.01)
+    U = ir.matrix("U", (20000, 100))
+    V = ir.matrix("V", (20000, 100))
+    r = ir.matrix("r", (20000, 1))
+    O = (ir.neq0(X) * (U @ V.T)) @ V + 1e-6 * U * r
+    _check_graph(ir.Graph.build([O]))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: random DAGs
+# ---------------------------------------------------------------------------
+
+_UNARIES = ["exp", "abs", "relu", "pow2", "sqrt"]
+_BINS = ["add", "mul", "sub", "max"]
+
+
+@st.composite
+def random_graph(draw):
+    m = draw(st.sampled_from([500, 2000, 10000]))
+    n = draw(st.sampled_from([10, 100, 1000]))
+    sp = draw(st.sampled_from([1.0, 1.0, 0.1, 0.01]))
+    inputs = [ir.matrix(f"I{i}", (m, n), sparsity=sp if i == 0 else 1.0)
+              for i in range(draw(st.integers(2, 3)))]
+    pool = list(inputs)
+    for _ in range(draw(st.integers(2, 7))):
+        k = draw(st.integers(0, 1))
+        if k == 0:
+            a = draw(st.sampled_from(pool))
+            pool.append(a.unary(draw(st.sampled_from(_UNARIES))))
+        else:
+            a, b = draw(st.sampled_from(pool)), draw(st.sampled_from(pool))
+            pool.append(a._bin(b, draw(st.sampled_from(_BINS))))
+    outs = []
+    n_out = draw(st.integers(1, 3))
+    for _ in range(n_out):
+        x = draw(st.sampled_from(pool[-4:]))
+        agg = draw(st.sampled_from(["sum", "rowsums", "colsums", "none"]))
+        outs.append({"sum": x.sum(), "rowsums": x.rowsums(),
+                     "colsums": x.colsums(), "none": x}[agg])
+    return ir.Graph.build(outs)
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_graph())
+def test_random_dags_optimal(g):
+    _check_graph(g)
+
+
+def test_cut_sets_valid():
+    # diamond with a clear cut: m consumed by two chains that re-join
+    X = ir.matrix("X", (5000, 100))
+    m = ir.exp(X)
+    a = (m * 2.0 + 1.0)
+    b = (m - 3.0)
+    out = (a * b).sum()
+    g = ir.Graph.build([out])
+    memo = explore(g)
+    (part,) = build_partitions(g, memo)
+    cuts = find_cut_sets(g, part, part.points)
+    for c in cuts:
+        assert not (set(c.s1_ix) & set(c.s2_ix))
+        assert set(c.points_ix + c.s1_ix + c.s2_ix) == set(
+            range(len(part.points)))
+
+
+def test_pruning_reduces_costed_plans():
+    """Fig. 12: cost-based pruning cuts evaluated plans by large factors."""
+    X = ir.matrix("X", (100000, 100))
+    m = ir.exp(X)
+    outs = []
+    cur = m
+    for i in range(5):
+        cur = cur * float(i + 2)
+        outs.append(cur.sum())
+    g = ir.Graph.build(outs)
+    memo = explore(g)
+    parts = build_partitions(g, memo)
+    st_p = EnumStats()
+    for part in parts:
+        mp_skip_enum(g, memo, part, TPU_V5E, stats=st_p)
+    st_np = EnumStats()
+    for part in parts:
+        mp_skip_enum(g, memo, part, TPU_V5E, use_cost_pruning=False,
+                     use_structural=False, stats=st_np)
+    assert st_p.plans_costed <= st_np.plans_costed

@@ -1,0 +1,152 @@
+"""Numeric equivalence: every fusion mode and execution path must agree
+with a direct jnp evaluation, across an expression battery."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ir, fused, fusion_mode
+
+rng = np.random.default_rng(7)
+
+
+def arr(*shape, pos=False):
+    a = rng.normal(size=shape).astype(np.float32)
+    if pos:
+        a = np.abs(a) + 0.5
+    return jnp.asarray(a)
+
+
+BATTERY = []
+
+
+def case(fn):
+    BATTERY.append(fn)
+    return fn
+
+
+@case
+def _sum_mul3():
+    X, Y, Z = arr(65, 33), arr(65, 33), arr(65, 33)
+    f = fused(lambda X, Y, Z: (X * Y * Z).sum())
+    return f, dict(X=X, Y=Y, Z=Z), jnp.sum(X * Y * Z)
+
+
+@case
+def _weighted_sigmoid():
+    X, v = arr(40, 17), arr(40, 1)
+    f = fused(lambda X, v: (ir.sigmoid(X) * v + 2.0).rowsums())
+    return f, dict(X=X, v=v), jnp.sum(1 / (1 + jnp.exp(-X)) * v + 2.0,
+                                      axis=1, keepdims=True)
+
+
+@case
+def _colsums_div():
+    X = arr(30, 20, pos=True)
+    f = fused(lambda X: (X / 2.0 - 1.0).colsums())
+    return f, dict(X=X), jnp.sum(X / 2.0 - 1.0, axis=0, keepdims=True)
+
+
+@case
+def _min_max_agg():
+    X, Y = arr(25, 25), arr(25, 25)
+    f = fused(lambda X, Y: ir.maximum(X, Y).max_())
+    return f, dict(X=X, Y=Y), jnp.max(jnp.maximum(X, Y)).reshape(1, 1)
+
+
+@case
+def _mmchain():
+    X, v = arr(120, 16), arr(16, 1)
+    f = fused(lambda X, v: X.T @ (X @ v))
+    return f, dict(X=X, v=v), X.T @ (X @ v)
+
+
+@case
+def _mmchain_weighted():
+    X, v, w = arr(120, 16), arr(16, 2), arr(120, 1)
+    f = fused(lambda X, v, w: X.T @ (w * (X @ v)))
+    return f, dict(X=X, v=v, w=w), X.T @ (w * (X @ v))
+
+
+@case
+def _mlogreg_inner():
+    X, v, P = arr(96, 24), arr(24, 4), arr(96, 5)
+    def expr(X, v, P):
+        Q = P.cols(0, 4) * (X @ v)
+        return X.T @ (Q - P.cols(0, 4) * Q.rowsums())
+    Q = P[:, :4] * (X @ v)
+    exp = X.T @ (Q - P[:, :4] * Q.sum(1, keepdims=True))
+    return fused(expr), dict(X=X, v=v, P=P), exp
+
+
+@case
+def _multi_out():
+    X, Y = arr(33, 44), arr(33, 44)
+    f = fused(lambda X, Y: ((X * Y).sum(), (X ** 2).sum(), (Y ** 2).sum()))
+    return f, dict(X=X, Y=Y), (jnp.sum(X * Y).reshape(1, 1),
+                               jnp.sum(X * X).reshape(1, 1),
+                               jnp.sum(Y * Y).reshape(1, 1))
+
+
+@case
+def _where_chain():
+    X, Y = arr(20, 20), arr(20, 20)
+    f = fused(lambda X, Y: ir.where(X > 0.0, X * Y, Y - 1.0).sum())
+    exp = jnp.sum(jnp.where(X > 0, X * Y, Y - 1.0)).reshape(1, 1)
+    return f, dict(X=X, Y=Y), exp
+
+
+@pytest.mark.parametrize("mode", ["gen", "fa", "fnr", "none"])
+@pytest.mark.parametrize("i", range(len(BATTERY)))
+def test_modes_agree(i, mode):
+    f, binds, exp = BATTERY[i]()
+    with fusion_mode(mode):
+        got = f(**binds)
+    _assert_close(got, exp)
+
+
+@pytest.mark.parametrize("i", range(len(BATTERY)))
+def test_pallas_agrees(i):
+    f, binds, exp = BATTERY[i]()
+    with fusion_mode("gen", pallas="interpret"):
+        got = f(**binds)
+    _assert_close(got, exp)
+
+
+def _assert_close(got, exp):
+    if isinstance(exp, tuple):
+        assert isinstance(got, tuple) and len(got) == len(exp)
+        for g, e in zip(got, exp):
+            _assert_close(g, e)
+        return
+    g = np.asarray(got).reshape(np.asarray(exp).shape)
+    np.testing.assert_allclose(g, np.asarray(exp), rtol=2e-4, atol=2e-4)
+
+
+def test_jit_compatible():
+    import jax
+    X, Y = arr(32, 32), arr(32, 32)
+    f = fused(lambda X, Y: (X * Y + 1.0).sum())
+
+    @jax.jit
+    def step(a, b):
+        return f(a, b) * 2.0
+
+    got = step(X, Y)
+    np.testing.assert_allclose(np.asarray(got).ravel(),
+                               (jnp.sum(X * Y + 1.0) * 2.0).ravel(),
+                               rtol=1e-5)
+
+
+def test_plan_cache_hits():
+    from repro.core.codegen import PLAN_CACHE
+    PLAN_CACHE.clear()
+    X, Y = arr(16, 16), arr(16, 16)
+    f = fused(lambda X, Y: (X * Y).sum())
+    with fusion_mode("gen"):
+        f(X, Y)
+        before = PLAN_CACHE.stats.misses
+        g = fused(lambda X, Y: (X * Y).sum())   # same structure, new trace
+        g(X, Y)
+    assert PLAN_CACHE.stats.misses == before      # structural hash hit
+    assert PLAN_CACHE.stats.hits >= 1

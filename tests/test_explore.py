@@ -1,0 +1,98 @@
+"""OFMC candidate exploration (Algorithm 1) invariants on paper examples."""
+
+import pytest
+
+from repro.core import ir
+from repro.core.explore import ExploreStats, explore
+from repro.core.templates import Status, TType
+
+
+def _mlogreg_graph():
+    X = ir.matrix("X", (10000, 100))
+    v = ir.matrix("v", (100, 4))
+    P = ir.matrix("P", (10000, 5))
+    Pk = P.cols(0, 4)
+    Q = Pk * (X @ v)
+    H = X.T @ (Q - Pk * Q.rowsums())
+    return ir.Graph.build([H])
+
+
+def _als_graph(sp=0.01):
+    X = ir.matrix("X", (20000, 20000), sparsity=sp)
+    U = ir.matrix("U", (20000, 100))
+    V = ir.matrix("V", (20000, 100))
+    r = ir.matrix("r", (20000, 1))
+    O = (ir.neq0(X) * (U @ V.T)) @ V + 1e-6 * U * r
+    return ir.Graph.build([O])
+
+
+def test_every_operator_visited_once():
+    g = _mlogreg_graph()
+    st = ExploreStats()
+    explore(g, stats=st)
+    n_ops = sum(1 for n in g.nodes if not n.is_input)
+    assert st.operators == n_ops
+
+
+def test_entry_bound_linear():
+    """Paper: ≤ 32n entries (2^3 inputs × 4 templates)."""
+    g = _als_graph()
+    st = ExploreStats()
+    memo = explore(g, stats=st)
+    assert memo.n_entries() <= 32 * len(g)
+
+
+def test_mlogreg_memo_structure():
+    """Figure 5: the final ba(+*) carries open Row plans; rowSums has Row
+    entries and no single-op closed Cell entry."""
+    g = _mlogreg_graph()
+    memo = explore(g)
+    rowsums = next(n for n in g.nodes if n.is_agg and n.agg_axis == "row")
+    types = memo.distinct_types(rowsums.nid)
+    assert TType.ROW in types
+    for e in memo.entries(rowsums.nid):
+        assert not (e.status == Status.CLOSED_VALID and e.n_refs == 0)
+    final = g.outputs[0]
+    entries = memo.entries(final.nid)
+    assert entries and all(e.ttype == TType.ROW for e in entries)
+    assert any(e.status == Status.CLOSED_VALID for e in entries)
+
+
+def test_als_outer_entries():
+    """The sparsity-exploiting Outer plan must exist and close valid at the
+    right_mm; the outer matmul itself is an invalid entry point."""
+    g = _als_graph()
+    memo = explore(g)
+    mm_outer = next(n for n in g.nodes if n.is_matmul and n.tb)
+    assert all(e.status == Status.OPEN_INVALID
+               for e in memo.entries(mm_outer.nid))
+    rmm = next(n for n in g.nodes
+               if n.is_matmul and not n.tb and not n.ta)
+    outer = [e for e in memo.entries(rmm.nid) if e.ttype == TType.OUTER]
+    assert outer and outer[0].status == Status.CLOSED_VALID
+
+
+def test_outer_requires_sparse_driver():
+    """sum(U@V.T) has no sparse-safe driver → no valid Outer plan."""
+    U = ir.matrix("U", (2000, 10))
+    V = ir.matrix("V", (2000, 10))
+    g = ir.Graph.build([(U @ V.T).sum()])
+    memo = explore(g)
+    agg = g.outputs[0]
+    assert all(e.ttype != TType.OUTER for e in memo.entries(agg.nid))
+
+
+def test_multi_agg_entries():
+    X = ir.matrix("X", (500, 500))
+    Y = ir.matrix("Y", (500, 500))
+    g = ir.Graph.build([(X * Y).sum(), (X ** 2).sum()])
+    memo = explore(g)
+    for out in g.outputs:
+        assert TType.MAGG in memo.distinct_types(out.nid)
+
+
+def test_dominance_pruning_only_for_heuristics():
+    g = _mlogreg_graph()
+    base = explore(g, prune_dominated=False).n_entries()
+    pruned = explore(g, prune_dominated=True).n_entries()
+    assert pruned <= base

@@ -1,0 +1,85 @@
+"""IR construction: shapes, broadcasting, CSE, sparsity propagation."""
+
+import numpy as np
+import pytest
+
+from repro.core import ir
+
+
+def test_shapes_and_broadcast():
+    X = ir.matrix("X", (100, 10))
+    v = ir.matrix("v", (100, 1))
+    r = ir.matrix("r", (1, 10))
+    assert (X * v).shape == (100, 10)
+    assert (X + r).shape == (100, 10)
+    assert (X * 2.0).shape == (100, 10)
+    assert X.rowsums().shape == (100, 1)
+    assert X.colsums().shape == (1, 10)
+    assert X.sum().shape == (1, 1)
+    assert (X.T).shape == (10, 100)
+    with pytest.raises(ValueError):
+        _ = X + ir.matrix("Y", (50, 10))
+
+
+def test_matmul_transpose_folding():
+    X = ir.matrix("X", (100, 10))
+    y = ir.matrix("y", (100, 1))
+    n = (X.T @ y).node
+    assert n.op == "matmul" and n.ta and not n.tb
+    assert n.shape == (10, 1)
+    U = ir.matrix("U", (50, 8))
+    V = ir.matrix("V", (60, 8))
+    o = (U @ V.T).node
+    assert o.tb and o.shape == (50, 60)
+    assert o.mm_dims() == (50, 8, 60)
+
+
+def test_double_transpose_cancels():
+    X = ir.matrix("X", (3, 4))
+    assert X.T.T.node is X.node
+
+
+def test_cse_dedup():
+    X = ir.matrix("X", (10, 10))
+    Y = ir.matrix("Y", (10, 10))
+    a = (X * Y).sum()
+    b = (X * Y).sum()
+    g = ir.Graph.build([a, b])
+    muls = [n for n in g.nodes if n.op == "mul"]
+    sums = [n for n in g.nodes if n.op == "sum"]
+    assert len(muls) == 1 and len(sums) == 1
+    assert len(g.outputs) == 2 and g.outputs[0] is g.outputs[1]
+
+
+def test_sparsity_propagation():
+    X = ir.matrix("X", (100, 100), sparsity=0.1)
+    Y = ir.matrix("Y", (100, 100), sparsity=0.2)
+    assert (X * Y).node.sparsity == pytest.approx(0.1)
+    assert (X + Y).node.sparsity == pytest.approx(0.3)
+    assert ir.exp(X).node.sparsity == 1.0       # exp(0) != 0
+    assert ir.abs_(X).node.sparsity == pytest.approx(0.1)
+    assert (X ** 2).node.op == "pow2"
+
+
+def test_sparse_safety():
+    X = ir.matrix("X", (200, 200), sparsity=0.05)
+    U = ir.matrix("U", (200, 8))
+    V = ir.matrix("V", (200, 8))
+    chain = ir.neq0(X) * (U @ V.T)
+    assert ir.sparse_safe_wrt(chain.node, X.node)
+    assert not ir.sparse_safe_wrt(chain.node, U.node)
+    plus = chain + 1.0
+    assert not ir.sparse_safe_wrt(plus.node, X.node)
+    # div by side is safe for the numerator's driver
+    d = chain / ir.exp(U @ V.T)
+    assert ir.sparse_safe_wrt(d.node, X.node)
+
+
+def test_consumer_counts():
+    X = ir.matrix("X", (10, 10))
+    m = X * 2.0
+    a, b = m.rowsums(), m.colsums()
+    g = ir.Graph.build([a, b])
+    mul = next(n for n in g.nodes if n.op == "mul")
+    assert g.n_consumers(mul.nid) == 2
+    assert mul.nid in g.multi_consumer_ids()

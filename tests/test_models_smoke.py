@@ -1,0 +1,80 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step on CPU, asserting output shapes and finiteness; plus prefill→decode
+consistency against the full forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import LM, lm_loss
+
+
+def _tokens(cfg, B, S, key):
+    shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, S)
+    return jax.random.randint(key, shape, 0, cfg.vocab)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    m = LM(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    toks = _tokens(cfg, B, S + 1, jax.random.PRNGKey(1))
+    inp, tgt = toks[:, :S], toks[:, 1:]
+    prefix = None
+    if cfg.frontend == "vision":
+        prefix = jnp.ones((B, 4, cfg.d_model), jnp.float32)
+
+    def loss_fn(p):
+        logits, _, aux = m.apply(p, inp, prefix_emb=prefix)
+        logits = logits[:, -S:]          # drop prefix positions
+        if cfg.n_codebooks > 1:
+            l = jnp.mean(jnp.stack([
+                lm_loss(logits[..., c, :], tgt[..., c])
+                for c in range(cfg.n_codebooks)]))
+        else:
+            l = lm_loss(logits, tgt)
+        return l + 0.01 * aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss)), arch
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in leaves), arch
+    # one SGD step reduces nothing catastrophic (finite update)
+    new_params = jax.tree_util.tree_map(lambda p, g: p - 1e-2 * g,
+                                        params, grads)
+    loss2 = loss_fn(new_params)
+    assert np.isfinite(float(loss2)), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    cfg = get_config(arch).reduced()
+    m = LM(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    toks = _tokens(cfg, B, S, jax.random.PRNGKey(1))
+    full_logits, _, _ = m.apply(params, toks)
+    P = S - 3
+    cache = m.init_cache(B, S)
+    _, cache, _ = m.apply(params, toks[:, :P], caches=cache)
+    for t in range(P, S):
+        logits, cache = m.decode_step(params, cache, toks[:, t:t + 1], t)
+        err = float(jnp.max(jnp.abs(logits - full_logits[:, t:t + 1])))
+        assert err < 2e-2, (arch, t, err)
+
+
+def test_sliding_window_masks_differently():
+    cfg = get_config("gemma3-27b").reduced()
+    m = LM(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = _tokens(cfg, 1, 64, jax.random.PRNGKey(2))
+    l1, _, _ = m.apply(params, toks)
+    # distant past must influence global layers only — changing token 0
+    # must still change the last logits (global layer exists in pattern)
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 1) % cfg.vocab)
+    l2, _, _ = m.apply(params, toks2)
+    assert float(jnp.max(jnp.abs(l1[:, -1] - l2[:, -1]))) > 0

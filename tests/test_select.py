@@ -1,0 +1,103 @@
+"""Candidate selection: partitions, interesting points, plan quality."""
+
+import math
+
+import pytest
+
+from repro.core import ir
+from repro.core.cost import TPU_V5E, partition_cost
+from repro.core.explore import explore
+from repro.core.partitions import build_partitions
+from repro.core.select import MultiAggSpec, plan
+from repro.core.templates import TType
+
+
+def test_partitions_independent():
+    # two unconnected fusable chains → two partitions
+    X = ir.matrix("X", (100, 100))
+    Y = ir.matrix("Y", (100, 100))
+    A = ir.matrix("A", (50, 50))
+    g = ir.Graph.build([(X * Y).sum(), (A + 1.0).rowsums()])
+    memo = explore(g)
+    parts = build_partitions(g, memo)
+    assert len(parts) == 2
+
+
+def test_interesting_points_mat_consumers():
+    X = ir.matrix("X", (100, 100))
+    m = X * 2.0                       # multi-consumer intermediate
+    g = ir.Graph.build([(m + 1.0).sum(), (m * m).sum()])
+    memo = explore(g)
+    parts = build_partitions(g, memo)
+    assert len(parts) == 1
+    p = parts[0]
+    mul = next(n for n in g.nodes if n.op == "mul"
+               and any(i.op == "lit" for i in n.inputs))
+    assert mul.nid in p.mat_points
+    consumers = {c for (c, t) in p.points if t == mul.nid}
+    assert len(consumers) >= 2        # one boolean per consuming dependency
+
+
+def test_template_switch_point():
+    """Y + X ⊙ UVᵀ: the Cell consumer of the Outer chain is a switch."""
+    X = ir.matrix("X", (1000, 1000), sparsity=0.05)
+    U = ir.matrix("U", (1000, 16))
+    V = ir.matrix("V", (1000, 16))
+    Y = ir.matrix("Y", (1000, 1000))
+    out = Y + X * (U @ V.T)
+    g = ir.Graph.build([out.sum()])
+    memo = explore(g)
+    parts = build_partitions(g, memo)
+    pts = [p for part in parts for p in part.points]
+    assert pts, "expected at least one template-switch interesting point"
+
+
+def test_gen_beats_heuristics_on_als():
+    X = ir.matrix("X", (20000, 20000), sparsity=0.01)
+    U = ir.matrix("U", (20000, 100))
+    V = ir.matrix("V", (20000, 100))
+    r = ir.matrix("r", (20000, 1))
+    O = (ir.neq0(X) * (U @ V.T)) @ V + 1e-6 * U * r
+    g = ir.Graph.build([O])
+    costs = {m: plan(g, m).cost for m in ("gen", "fa", "fnr", "none")}
+    assert costs["gen"] < costs["fa"] / 5
+    assert costs["gen"] < costs["fnr"] / 5
+    assert costs["fa"] <= costs["none"]
+    p = plan(g, "gen")
+    outers = [s for s in p.specs if getattr(s, "ttype", None) == TType.OUTER]
+    assert outers and outers[0].driver is not None
+
+
+def test_gen_never_worse_than_heuristics():
+    X = ir.matrix("X", (100000, 10))
+    w = ir.matrix("w", (10, 1))
+    y = ir.matrix("y", (100000, 1))
+    out = ir.relu(1.0 - y * (X @ w))
+    g = ir.Graph.build([(out ** 2).sum(), out.rowsums()])
+    c = {m: plan(g, m).cost for m in ("gen", "fa", "fnr", "none")}
+    assert c["gen"] <= c["fa"] + 1e-12
+    assert c["gen"] <= c["fnr"] + 1e-12
+    assert c["gen"] <= c["none"] + 1e-12
+
+
+def test_multiagg_combining_gen_only():
+    X = ir.matrix("X", (1000, 1000))
+    Y = ir.matrix("Y", (1000, 1000))
+    Z = ir.matrix("Z", (1000, 1000))
+    g = ir.Graph.build([(X * Y).sum(), (X * Z).sum(), (X ** 2).sum()])
+    pg = plan(g, "gen")
+    multi = [s for s in pg.specs if isinstance(s, MultiAggSpec)]
+    assert len(multi) == 1 and len(multi[0].roots) == 3
+    pf = plan(g, "fa")
+    assert not [s for s in pf.specs if isinstance(s, MultiAggSpec)]
+
+
+def test_fnr_materializes_multi_consumers():
+    X = ir.matrix("X", (1000, 1000))
+    m = X * 2.0
+    g = ir.Graph.build([(m + 1.0).sum(), (m * 3.0).sum()])
+    p = plan(g, "fnr")
+    # the shared intermediate must be produced by its own operator
+    mul = next(n for n in g.nodes if n.op == "mul"
+               and any(i.op == "lit" for i in n.inputs))
+    assert any(s.root == mul.nid for s in p.specs)

@@ -1,0 +1,104 @@
+"""Sharding rules: every parameter/cache spec must be valid (rank-matched,
+divisibility-checked) for every architecture on both production mesh
+shapes — checked abstractly (no device allocation, no compile)."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, all_configs, applicable, get_config
+from repro.dist import sharding as sh
+from repro.launch.serve import cache_specs_abstract
+from repro.models import LM
+
+
+class _FakeMesh:
+    """Mesh stand-in: shape dict + axis names (rules only use these)."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESHES = {
+    "pod16x16": _FakeMesh({"data": 16, "model": 16}),
+    "multipod2x16x16": _FakeMesh({"pod": 2, "data": 16, "model": 16}),
+}
+
+
+def _axsize(mesh, axes):
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def _check_tree(mesh, specs, abstract):
+    leaves_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    leaves_a = jax.tree_util.tree_leaves(abstract)
+    assert len(leaves_s) == len(leaves_a)
+    for spec, leaf in zip(leaves_s, leaves_a):
+        assert len(spec) <= len(leaf.shape), (spec, leaf.shape)
+        for dim, axes in zip(leaf.shape, tuple(spec)):
+            n = _axsize(mesh, axes)
+            assert dim % n == 0, (spec, leaf.shape, dim, n)
+
+
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_divisible(arch, mesh_name):
+    cfg = get_config(arch)
+    mesh = MESHES[mesh_name]
+    model = LM(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    specs = sh.param_specs(mesh, cfg, params)
+    _check_tree(mesh, specs, params)
+    # serving layout too (no fsdp axes)
+    _check_tree(mesh, sh.param_specs(mesh, cfg, params, serve=True), params)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_cache_specs_divisible(arch):
+    cfg = get_config(arch)
+    mesh = MESHES["pod16x16"]
+    model = LM(cfg)
+    for shape in SHAPES.values():
+        if not shape.is_decode or not applicable(cfg, shape):
+            continue
+        cache = cache_specs_abstract(model, shape)
+        specs = sh.cache_specs(mesh, cfg, shape, cache)
+        _check_tree(mesh, specs, cache)
+
+
+def test_tp_dims_actually_sharded():
+    """The big TP dims must not silently fall back to replication."""
+    cfg = get_config("yi-34b")
+    mesh = MESHES["pod16x16"]
+    model = LM(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    specs = sh.param_specs(mesh, cfg, params)
+    w1 = specs["blocks"][0]["mlp"]["w1"]
+    assert "model" in jax.tree_util.tree_leaves(
+        [w1], is_leaf=lambda x: isinstance(x, P))[0]
+    emb = specs["embed"]
+    assert tuple(emb)[0] == "model"           # vocab TP
+
+
+def test_moe_ep_vs_tp_choice():
+    """olmoe (64e) shards experts over model (EP); grok (8e) falls back
+    to ff-TP — the documented rule."""
+    mesh = MESHES["pod16x16"]
+    for arch, expect_ep in (("olmoe-1b-7b", True), ("grok-1-314b", False)):
+        cfg = get_config(arch)
+        model = LM(cfg)
+        params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+        specs = sh.param_specs(mesh, cfg, params)
+        w1 = tuple(specs["blocks"][0]["mlp"]["w1"])
+        # leading (G,) stacked dim is None; expert dim is index 1
+        assert (w1[1] == "model") == expect_ep, (arch, w1)
