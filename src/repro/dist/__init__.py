@@ -1,0 +1,9 @@
+"""Distribution subsystem: JAX compat shims + mesh-aware layout rules.
+
+``repro.dist.sharding`` holds the parameter/cache/batch/activation
+PartitionSpec rules consumed by the models, the launch stack, and the
+dry-run coster; ``repro.dist.compat`` backfills ``jax.sharding.AxisType``
+on older JAX.  Importing this package installs the compat shims.
+"""
+
+from . import compat  # noqa: F401  (installs AxisType/make_mesh shims)

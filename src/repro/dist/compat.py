@@ -1,0 +1,68 @@
+"""JAX version-compat shims for the distribution subsystem.
+
+Mesh-construction sites (``launch/mesh.py``, ``launch/costing.py``, the
+dry-run subprocesses and tests) target the modern explicit-sharding API:
+``jax.sharding.AxisType`` plus ``jax.make_mesh(..., axis_types=...)``.
+Installed JAX releases that predate ``AxisType`` raise ``AttributeError``
+on the former and ``TypeError`` on the latter; :func:`install` backfills
+both so mesh construction is writable one way everywhere.  Pre-AxisType
+meshes behave as all-``Auto``, so dropping an all-``Auto`` request is
+exactly the caller's intent (anything else raises).
+
+The backfill deliberately patches the ``jax`` namespace process-wide:
+the test suite and dry-run subprocesses use ``jax.sharding.AxisType`` /
+``jax.make_mesh(..., axis_types=...)`` directly, so a local wrapper
+would not cover them.  On a JAX old enough to need the shim, other
+libraries feature-detecting ``AxisType`` via ``hasattr`` will see the
+backfill — acceptable in this repo's pinned environments.
+"""
+
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+
+
+class _AxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def install() -> None:
+    """Idempotently backfill ``jax.sharding.AxisType`` and the
+    ``axis_types=`` kwarg of ``jax.make_mesh`` on older JAX."""
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+    if not hasattr(jax, "make_mesh"):   # predates make_mesh entirely
+        return
+    if getattr(jax.make_mesh, "_repro_axis_types_shim", False):
+        return
+    if "axis_types" in inspect.signature(jax.make_mesh).parameters:
+        return
+    orig = jax.make_mesh
+
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+        # Pre-AxisType meshes are implicitly all-Auto; anything else has
+        # no equivalent here and must not degrade silently.
+        if axis_types is not None and any(
+                getattr(t, "name", t) != "Auto" for t in axis_types):
+            raise NotImplementedError(
+                f"installed JAX only supports Auto mesh axes, "
+                f"got axis_types={axis_types}")
+        return orig(axis_shapes, axis_names, devices=devices)
+
+    make_mesh._repro_axis_types_shim = True
+    make_mesh.__doc__ = orig.__doc__
+    jax.make_mesh = make_mesh
+
+
+def auto_axis_types(n: int) -> tuple:
+    """``(AxisType.Auto,) * n`` — for explicit mesh-construction sites."""
+    install()
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+install()

@@ -203,7 +203,7 @@ def _measure(cfg, shape, mesh, n_mb: int) -> tuple[float, float]:
             NamedSharding(mesh, P_()))
         ).lower(params_abs, cache_abs, dspecs["token"],
                 dspecs["pos"]).compile()
-    ca = comp.cost_analysis()
+    ca = dl.cost_analysis_dict(comp)
     n_dev = 1
     for v in mesh.shape.values():
         n_dev *= v
@@ -308,9 +308,9 @@ def main() -> None:
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
     from repro.configs import all_configs, cells
+    from repro.dist.compat import auto_axis_types
     probe_mesh = jax.make_mesh(
-        (4, 2), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        (4, 2), ("data", "model"), axis_types=auto_axis_types(2))
     for arch, shape in cells(all_configs()):
         try:
             rec = probe_cell(arch, shape, probe_mesh, force=args.force)

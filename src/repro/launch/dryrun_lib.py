@@ -69,6 +69,15 @@ def collective_bytes(hlo_text: str) -> dict:
 
 # ---------------------------------------------------------------------------
 
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` across JAX versions: older releases
+    return a one-element list of dicts, newer ones the dict itself."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def abstract_params(model: LM):
     return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
 
@@ -197,7 +206,7 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, *,
     t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     from repro.launch.costing import corrected_collectives

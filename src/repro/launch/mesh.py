@@ -8,14 +8,15 @@ from __future__ import annotations
 
 import jax
 
+from repro.dist.compat import auto_axis_types
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     import numpy as np
     n = int(np.prod(shape))
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto,
+    return jax.make_mesh(shape, axes, axis_types=auto_axis_types(len(axes)),
                          devices=jax.devices()[:n])
 
 
@@ -28,8 +29,9 @@ def make_host_mesh(model: int = 1):
 
 def fsdp_axes(mesh) -> tuple[str, ...]:
     """Axes used for fully-sharded parameter storage (everything except
-    the tensor-parallel 'model' axis)."""
-    return tuple(a for a in mesh.axis_names if a != "model")
+    the tensor-parallel axis) — single source of truth in repro.dist."""
+    from repro.dist import sharding
+    return sharding.fsdp_axes(mesh)
 
 
 def dp_size(mesh) -> int:

@@ -144,16 +144,19 @@ def moe_a2a(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     to the local capacity dispatch.
     """
     from repro.dist import sharding as shlib
-    rules = getattr(shlib._ACT, "rules", None)
+    rules = shlib.current_rules()
     if rules is None:
         return moe_capacity(x, p, cfg, capacity_factor)
     mesh, _mode = rules
-    if "model" not in mesh.axis_names \
-            or cfg.n_experts % mesh.shape["model"] != 0:
+    if not shlib.moe_expert_parallel(mesh, cfg):
         return moe_capacity(x, p, cfg, capacity_factor)
-    ep = mesh.shape["model"]
+    EP = shlib.TP_AXIS              # experts travel over the TP axis
     e, k, d = cfg.n_experts, cfg.top_k, x.shape[-1]
-    fsdp = tuple(a for a in mesh.axis_names if a != "model")
+    fsdp = shlib.fsdp_axes(mesh)
+    # shard_map would reject a token count that doesn't split over the
+    # data axes — degrade like every other rule instead of erroring
+    if not fsdp or x.shape[0] % shlib.axis_size(mesh, fsdp) != 0:
+        return moe_capacity(x, p, cfg, capacity_factor)
 
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
@@ -179,7 +182,7 @@ def moe_a2a(x: jnp.ndarray, p: dict, cfg: ModelConfig,
             .at[slot].set(x_loc[ranked_tok])
         buf = buf[:e * C].reshape(e, C, d)
         # ship each expert's rows to its owner: (E, C, d) → (E/ep, ep·C, d)
-        buf = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=1,
+        buf = jax.lax.all_to_all(buf, EP, split_axis=0, concat_axis=1,
                                  tiled=True)
         h = jnp.einsum("ecd,edf->ecf", buf, w1)
         if has_w3:
@@ -188,7 +191,7 @@ def moe_a2a(x: jnp.ndarray, p: dict, cfg: ModelConfig,
             h = _act(cfg)(h)
         y = jnp.einsum("ecf,efd->ecd", h, w2)
         # ship results home: (E/ep, ep·C, d) → (E, C, d)
-        y = jax.lax.all_to_all(y, "model", split_axis=1, concat_axis=0,
+        y = jax.lax.all_to_all(y, EP, split_axis=1, concat_axis=0,
                                tiled=True)
         y = y.reshape(e * C, d)
         contrib = jnp.where(keep[:, None],
@@ -204,8 +207,8 @@ def moe_a2a(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     fn = shard_map(
         local, mesh=mesh,
         in_specs=(P(fsdp, None), P(None, None),
-                  P("model", None, None), P("model", None, None),
-                  P("model", None, None)),
+                  P(EP, None, None), P(EP, None, None),
+                  P(EP, None, None)),
         out_specs=(P(fsdp, None), P()),
         check_rep=False)
     return fn(x, p["router"], p["w1"], p["w2"],

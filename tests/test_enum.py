@@ -8,7 +8,10 @@ import itertools
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install repro[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import ir
 from repro.core.cost import TPU_V5E, partition_cost
