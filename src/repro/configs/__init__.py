@@ -1,3 +1,4 @@
 from .base import ModelConfig, ShapeConfig
+from .meshes import MESH_SHAPES, mesh_devices
 from .registry import ARCH_IDS, all_configs, get_config
 from .shapes import SHAPES, applicable, cells

@@ -1,0 +1,23 @@
+"""Named production mesh shapes (axis name → size, ordered).
+
+Pure data — no jax, no devices — so the layout planner, the sharding
+property tests, and the dry-run CLI all agree on what "pod16x16" means
+without constructing a real ``jax.sharding.Mesh`` (the sharding rules
+only ever read ``.shape``/``.axis_names``).
+"""
+
+from __future__ import annotations
+
+#: production mesh shapes: one v5e pod (16×16 = 256 chips) and the
+#: two-pod DCN-linked variant used by the multipod dry-run cells.
+MESH_SHAPES: dict[str, dict[str, int]] = {
+    "pod16x16": {"data": 16, "model": 16},
+    "multipod2x16x16": {"pod": 2, "data": 16, "model": 16},
+}
+
+
+def mesh_devices(name: str) -> int:
+    out = 1
+    for v in MESH_SHAPES[name].values():
+        out *= v
+    return out

@@ -25,18 +25,19 @@ import math
 from dataclasses import dataclass, field
 from typing import Optional
 
+from repro import hw as _hw
 from .ir import Graph, Node, sparse_safe_wrt
 from .memo import MemoEntry, MemoTable
 from .partitions import Partition, Point
 from .templates import TType
 
-# -- hardware constants (TPU v5e target) ------------------------------------
+# -- hardware constants (shared substrate: repro.hw, TPU v5e target) ---------
 
 @dataclass
 class CostParams:
-    read_bw: float = 819e9          # HBM read, B/s
-    write_bw: float = 819e9         # HBM write, B/s
-    compute_bw: float = 197e12      # peak FLOP/s (bf16 MXU)
+    read_bw: float = _hw.TPU_V5E.hbm_bw      # HBM read, B/s
+    write_bw: float = _hw.TPU_V5E.hbm_bw     # HBM write, B/s
+    compute_bw: float = _hw.TPU_V5E.peak_flops   # peak FLOP/s (bf16 MXU)
     dtype_bytes: int = 4
     sparse_idx_bytes: int = 4
     #: per-input read-bandwidth override (nid -> B/s): distributed side

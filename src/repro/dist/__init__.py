@@ -1,9 +1,12 @@
-"""Distribution subsystem: JAX compat shims + mesh-aware layout rules.
+"""Distribution subsystem: compat shims, layout rules, layout search.
 
 ``repro.dist.sharding`` holds the parameter/cache/batch/activation
 PartitionSpec rules consumed by the models, the launch stack, and the
-dry-run coster; ``repro.dist.compat`` backfills ``jax.sharding.AxisType``
-on older JAX.  Importing this package installs the compat shims.
+dry-run coster; ``repro.dist.planner`` searches over those rules'
+axis-role assignments with the shared roofline cost model (pass
+``layout="auto"`` to the dry-run, hillclimb, or serve engine);
+``repro.dist.compat`` backfills ``jax.sharding.AxisType`` on older JAX.
+Importing this package installs the compat shims.
 """
 
 from . import compat  # noqa: F401  (installs AxisType/make_mesh shims)

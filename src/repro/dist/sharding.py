@@ -182,14 +182,18 @@ def _param_roles(name: Any, base_rank: int, F, tp, ep: bool):
     return ()
 
 
-def param_specs(mesh, cfg, params, *, serve: bool = False):
+def param_specs(mesh, cfg, params, *, serve: bool = False,
+                moe: Optional[str] = None):
     """PartitionSpec tree mirroring ``params`` (the ``LM.init`` tree).
 
     Every spec is rank-matched and divisibility-checked against its
-    abstract leaf; ``serve=True`` drops the FSDP axes (TP only)."""
+    abstract leaf; ``serve=True`` drops the FSDP axes (TP only).
+    ``moe`` forces the expert-weight role (``"ep"`` / ``"fftp"``) instead
+    of the :func:`moe_expert_parallel` predicate — the layout planner
+    costs both roles; ``None`` keeps the fixed rule."""
     F = None if serve else (fsdp_axes(mesh) or None)
     tp = tp_axis(mesh)
-    ep = moe_expert_parallel(mesh, cfg)
+    ep = moe_expert_parallel(mesh, cfg) if moe is None else (moe == "ep")
 
     def rule(path, leaf):
         keys = _path_keys(path)

@@ -1,0 +1,16 @@
+"""Launch stack: mesh construction, dry-run costing, roofline/layout
+analysis, and the train/serve/hillclimb drivers."""
+
+import os
+
+
+def ensure_host_device_count(n: int = 512) -> None:
+    """Make XLA fake ``n`` host devices for production-mesh dry-runs.
+    Appends to any operator-provided ``XLA_FLAGS`` (unrelated flags
+    survive; an explicit device-count override wins) and must run
+    before the first jax backend initialization — this module imports
+    nothing that touches jax, so entrypoints can call it first."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}").strip()

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (architecture × input shape)
 cell on the production 16×16 single-pod mesh and the 2×16×16 multi-pod
 mesh, printing memory and cost analyses (the roofline inputs).
@@ -8,7 +5,7 @@ mesh, printing memory and cost analyses (the roofline inputs).
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --all
   PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b \
-      --shape train_4k --mesh both
+      --shape train_4k --mesh both [--layout auto]
 """
 
 import argparse
@@ -30,7 +27,16 @@ def main() -> int:
                     help="apply the §Perf-winning variants: act=dp for "
                          "train/prefill, TP-only params + grouped GQA "
                          "for decode")
+    ap.add_argument("--layout", default="fixed", choices=("fixed", "auto"),
+                    help="auto: lower under the planner-searched layout "
+                         "(repro.dist.planner) instead of the fixed rules")
     args = ap.parse_args()
+
+    # the 512-host-device override must precede any jax backend init —
+    # behind the main() guard (import-time flag mutation breaks any
+    # host that imported jax first)
+    from repro.launch import ensure_host_device_count
+    ensure_host_device_count(512)
 
     from repro.configs import all_configs, cells
     from repro.launch.dryrun_lib import run_cell
@@ -64,7 +70,8 @@ def main() -> int:
             try:
                 rec = run_cell(arch, shape, mesh, mesh_name,
                                fusion=args.fusion, force=args.force,
-                               variant=variant, variant_tag=vtag)
+                               variant=variant, variant_tag=vtag,
+                               layout=args.layout)
                 mem = rec["memory"]
                 print(f"OK   {tag}: "
                       f"flops/dev={rec['flops_per_device']:.3e} "

@@ -105,10 +105,24 @@ def apply_variant(cfg, variant: Optional[dict]):
     return dataclasses.replace(cfg, **fields) if fields else cfg
 
 
+def resolve_layout(arch: str, shape_name: str, mesh,
+                   variant: Optional[dict], layout: str) -> Optional[dict]:
+    """``layout="auto"``: merge the searched layout (``dist/planner``)
+    into the variant dict — explicit variant keys win, and any planner
+    failure falls back to the PR-1 fixed rules (variant unchanged)."""
+    if layout != "auto":
+        return variant
+    from repro.dist import planner
+    cfg = apply_variant(get_config(arch), variant)
+    return planner.auto_variant(mesh, cfg, SHAPES[shape_name], variant)
+
+
 def lower_cell(arch: str, shape_name: str, mesh, *,
                fusion: str = "off",
-               variant: Optional[dict] = None) -> tuple:
+               variant: Optional[dict] = None,
+               layout: str = "fixed") -> tuple:
     """Build (jitted_fn, abstract args) for one cell on ``mesh``."""
+    variant = resolve_layout(arch, shape_name, mesh, variant, layout)
     cfg = apply_variant(get_config(arch), variant)
     shape = SHAPES[shape_name]
     model = LM(cfg)
@@ -177,15 +191,23 @@ def lower_cell(arch: str, shape_name: str, mesh, *,
 def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, *,
              fusion: str = "off", save: bool = True,
              force: bool = False, variant: Optional[dict] = None,
-             variant_tag: str = "") -> dict:
-    """Lower + compile one cell; return (and persist) its statistics."""
+             variant_tag: str = "", layout: str = "fixed") -> dict:
+    """Lower + compile one cell; return (and persist) its statistics.
+    ``layout="auto"`` lowers under the planner-searched layout."""
     tag = f"{arch}__{shape_name}__{mesh_name}" + (
         f"__fusion-{fusion}" if fusion != "off" else "") + (
-        f"__{variant_tag}" if variant_tag else "")
+        f"__{variant_tag}" if variant_tag else "") + (
+        f"__layout-{layout}" if layout != "fixed" else "")
     out_path = RESULTS_DIR / f"{tag}.json"
     if save and out_path.exists() and not force:
         return json.loads(out_path.read_text())
 
+    resolved = resolve_layout(arch, shape_name, mesh, variant, layout)
+    # honesty marker: "auto" that fell back (or added nothing) lowers the
+    # fixed baseline — record that so auto-vs-fixed comparisons can't
+    # silently read baseline numbers as planner-searched results
+    layout_applied = layout == "auto" and resolved != dict(variant or {})
+    variant = resolved
     t0 = time.perf_counter()
     jitted, args = lower_cell(arch, shape_name, mesh, fusion=fusion,
                               variant=variant)
@@ -217,7 +239,8 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, *,
         n_dev *= v
     rec = {
         "arch": arch, "shape": shape_name, "mesh": mesh_name,
-        "devices": n_dev, "fusion": fusion,
+        "devices": n_dev, "fusion": fusion, "layout": layout,
+        "layout_applied": layout_applied,
         "variant": variant_tag or "baseline",
         "flops_per_device": float(cost.get("flops", 0.0)),
         "bytes_per_device": float(cost.get("bytes accessed", 0.0)),

@@ -1,12 +1,16 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """§Perf hillclimb driver: lower+compile the three chosen cells under each
 optimization variant on the production single-pod mesh, recording
 variant-tagged dry-run stats (and flop probes where compute changes).
 
-  PYTHONPATH=src python -m repro.launch.hillclimb
+``--layout auto`` re-runs the arms under the planner-searched layout
+(``repro.dist.planner``) instead of the fixed PR-1 sharding rules;
+explicit variant keys (``act``, ``serve_params``) still win over the
+planner's choices, so each arm measures exactly what it names.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb [--layout auto]
 """
+
+from __future__ import annotations
 
 import traceback
 
@@ -43,6 +47,18 @@ PROBE_VARIANTS = [
 
 
 def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--layout", default="fixed", choices=("fixed", "auto"))
+    args = ap.parse_args()
+
+    # the 512-host-device override must land before any jax backend init,
+    # so it runs behind the main() guard (merely importing this module
+    # must not fork the process's device count)
+    from repro.launch import ensure_host_device_count
+    ensure_host_device_count(512)
+
     from repro.launch.dryrun_lib import run_cell
     from repro.launch.mesh import make_production_mesh
 
@@ -53,7 +69,7 @@ def main() -> None:
                 fusion = variant.get("fusion", "off")
                 rec = run_cell(arch, shape, mesh, "pod16x16",
                                fusion=fusion, variant=variant,
-                               variant_tag=tag)
+                               variant_tag=tag, layout=args.layout)
                 coll = rec["collective_bytes_per_device_trip_corrected"]
                 print(f"OK   {arch} × {shape} [{tag}]: "
                       f"coll/dev={coll['total']:.3e} "

@@ -23,10 +23,11 @@ import json
 from pathlib import Path
 
 from repro.configs import SHAPES, all_configs
+from repro.hw import TPU_V5E as _HW
 
-PEAK_FLOPS = 197e12        # TPU v5e bf16
-HBM_BW = 819e9             # B/s
-ICI_BW = 50e9              # B/s per link
+PEAK_FLOPS = _HW.peak_flops        # TPU v5e bf16
+HBM_BW = _HW.hbm_bw                # B/s
+ICI_BW = _HW.ici_bw                # B/s per link
 
 RESULTS_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 
@@ -98,7 +99,7 @@ SUGGEST = {
 
 
 def load_all(mesh: str | None = None, fusion: str | None = None,
-             variant: str = "baseline"):
+             variant: str = "baseline", layout: str = "fixed"):
     recs = []
     for p in sorted(RESULTS_DIR.glob("*.json")):
         rec = json.loads(p.read_text())
@@ -107,6 +108,8 @@ def load_all(mesh: str | None = None, fusion: str | None = None,
         if (fusion or "off") != rec.get("fusion", "off"):
             continue
         if rec.get("variant", "baseline") != variant:
+            continue
+        if rec.get("layout", "fixed") != layout:
             continue
         recs.append(analyze(rec))
     return recs

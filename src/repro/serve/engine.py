@@ -32,19 +32,54 @@ class Request:
 
 
 class Engine:
+    """``mesh``/``layout`` opt into sharded serving: ``layout="auto"``
+    asks the planner (``repro.dist.planner``) for the cost-optimal
+    decode layout of this (config × slots × max_len) cell and shards
+    params + KV cache accordingly; ``"fixed"`` (and any planner failure)
+    uses the PR-1 serving rule — TP-only params, batch/head-sharded
+    cache.  ``mesh=None`` keeps the single-host unsharded path."""
+
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
-                 max_len: int = 512, seed: int = 0):
+                 max_len: int = 512, seed: int = 0, mesh=None,
+                 layout: str = "fixed"):
         self.cfg = cfg
         self.model = LM(cfg)
-        self.params = params
         self.max_len = max_len
         self.slots: list[Optional[Request]] = [None] * batch_slots
         self.pos = np.zeros(batch_slots, np.int32)
         self.cache = self.model.init_cache(batch_slots, max_len)
+        self.layout = None
+        if mesh is not None:
+            params = self._shard(mesh, layout, params, batch_slots)
+        self.params = params
         self._prefill = jax.jit(make_prefill_step(self.model, cfg))
         self._decode = jax.jit(make_serve_step(self.model, cfg))
         self._queue: "queue.Queue[Request]" = queue.Queue()
         self._key = jax.random.PRNGKey(seed)
+
+    def _shard(self, mesh, layout: str, params, batch_slots: int):
+        from repro.configs.base import ShapeConfig
+        from repro.dist import planner, sharding as sh
+
+        shape = ShapeConfig("engine_decode", self.max_len, batch_slots,
+                            "decode")
+        serve = True                      # PR-1 fixed serving rule
+        if layout == "auto":
+            from dataclasses import replace
+            sig = planner.signature_of(mesh)
+            fb = replace(planner.fixed_layout(self.cfg, shape, sig),
+                         serve_params=True)   # failure → TP-only serving
+            lay = planner.plan_layout(mesh, self.cfg, shape, fallback=fb)
+            self.layout = lay
+            serve = lay.serve_params
+        pspecs = sh.named(mesh, sh.param_specs(mesh, self.cfg, params,
+                                               serve=serve))
+        params = jax.tree_util.tree_map(jax.device_put, params, pspecs)
+        cspecs = sh.named(mesh, sh.cache_specs(mesh, self.cfg, shape,
+                                               self.cache))
+        self.cache = jax.tree_util.tree_map(jax.device_put, self.cache,
+                                            cspecs)
+        return params
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -59,9 +94,6 @@ class Engine:
             P = len(req.prompt)
             # prefill this slot (batch-1 prefill into slot i's cache rows)
             toks = jnp.asarray(req.prompt, jnp.int32)[None]
-            sub_cache = jax.tree_util.tree_map(
-                lambda c: c[:, i:i + 1] if c.ndim > 1 else c, self.cache,
-                is_leaf=lambda x: hasattr(x, "ndim"))
             sub_model_cache = self._slot_cache(i)
             _, new_cache = self._prefill(self.params, toks, sub_model_cache)
             self._write_slot_cache(i, new_cache)

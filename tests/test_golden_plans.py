@@ -1,0 +1,134 @@
+"""Golden-plan regression harness: the fused-operator signatures the
+cost-based planner (``mode="gen"``) selects for the paper algorithms are
+pinned in ``tests/golden/plans.json``.  A cost-model or enumeration edit
+that silently changes a selected plan fails here — intentional plan
+changes regenerate the goldens:
+
+    REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_golden_plans.py
+"""
+
+import json
+import os
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import fusion_mode
+from repro.core.select import MultiAggSpec
+
+GOLDEN = Path(__file__).parent / "golden" / "plans.json"
+
+
+def _arr(*shape):
+    return np.zeros(shape, np.float32)
+
+
+def _cases():
+    """(case name, Fused wrapper, shaped args) for every fusion site of
+    the three pinned algorithms — paper-scale (m ≫ n) shapes."""
+    from repro.algos import kmeans, l2svm, mlogreg
+
+    X = _arr(10_000, 100)
+    w = _arr(100, 1)
+    y = _arr(10_000, 1)
+    out = _arr(10_000, 1)
+    lam = _arr(1, 1)
+
+    Xk = _arr(10_000, 50)
+    XC = _arr(10_000, 5)
+    xsq = _arr(10_000, 1)
+    csq = _arr(1, 5)
+
+    B = _arr(100, 5)
+    P = _arr(10_000, 5)
+    Y = _arr(10_000, 5)
+    v = _arr(100, 5)
+
+    return [
+        ("l2svm/hinge", l2svm._hinge, dict(X=X, w=w, y=y)),
+        ("l2svm/grad", l2svm._grad, dict(X=X, out=out, y=y, w=w, lam=lam)),
+        ("l2svm/search_terms", l2svm._search_terms,
+         dict(out=out, yXs=_arr(10_000, 1))),
+        ("l2svm/objective", l2svm._objective, dict(out=out, w=w)),
+        ("kmeans/sq_rowsums", kmeans._sq_rowsums, dict(X=Xk)),
+        ("kmeans/min_dist", kmeans._min_dist,
+         dict(XC=XC, xsq=xsq, csq=csq)),
+        ("mlogreg/probs", mlogreg._probs, dict(X=X, B=B)),
+        ("mlogreg/hvp", mlogreg._hvp, dict(X=X, v=v, P=P)),
+        ("mlogreg/grad", mlogreg._grad, dict(X=X, P=P, Y=Y)),
+        ("mlogreg/nll_terms", mlogreg._nll_terms, dict(P=P, Y=Y)),
+    ]
+
+
+def _node_label(graph, nid):
+    n = graph.by_id[nid]
+    return n.name if n.name else n.op
+
+
+def _signature(eplan):
+    """Stable structural signature of every fused operator the plan
+    selected: template type, root op, sorted input labels, sparse
+    driver — the fields the issue pins down."""
+    g = eplan.graph
+    sigs = []
+    for s in eplan.fused_specs():
+        if isinstance(s, MultiAggSpec):
+            sigs.append({
+                "template": "MAGG(multi)",
+                "root": [g.by_id[r].op for r in s.roots],
+                "inputs": sorted(_node_label(g, i) for i in s.inputs),
+                "driver": None,
+            })
+        else:
+            sigs.append({
+                "template": s.ttype.name,
+                "root": g.by_id[s.root].op,
+                "inputs": sorted(_node_label(g, i) for i in s.inputs),
+                "driver": (_node_label(g, s.driver)
+                           if s.driver is not None else None),
+                "n_covered": len(s.cover),
+            })
+    # deterministic order for comparison regardless of selection order
+    return sorted(sigs, key=lambda d: json.dumps(d, sort_keys=True))
+
+
+def _compute_all():
+    out = {}
+    with fusion_mode("gen"):
+        for name, wrapper, args in _cases():
+            out[name] = _signature(wrapper.plan_for(**args))
+    return out
+
+
+def test_golden_plans_match():
+    actual = _compute_all()
+    if os.environ.get("REGEN_GOLDEN"):
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN.write_text(json.dumps(actual, indent=1, sort_keys=True))
+        pytest.skip(f"regenerated {GOLDEN}")
+    assert GOLDEN.exists(), \
+        "golden file missing — run with REGEN_GOLDEN=1 to create it"
+    expected = json.loads(GOLDEN.read_text())
+    assert set(actual) == set(expected)
+    for name in sorted(expected):
+        assert actual[name] == expected[name], (
+            f"{name}: selected plan changed\n"
+            f"  expected: {json.dumps(expected[name])}\n"
+            f"  actual:   {json.dumps(actual[name])}\n"
+            "If intentional, regenerate with REGEN_GOLDEN=1.")
+
+
+def test_golden_plans_have_fusion():
+    """Sanity on the harness itself: every pinned case selects at least
+    one fused operator (otherwise the golden pins nothing)."""
+    for name, sigs in _compute_all().items():
+        assert sigs, f"{name}: no fused operator selected"
+
+
+def test_plans_deterministic_across_runs():
+    """Planning the same expression twice yields identical signatures —
+    the property that makes golden pinning meaningful."""
+    a = _compute_all()
+    b = _compute_all()
+    assert a == b

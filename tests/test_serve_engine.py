@@ -57,3 +57,25 @@ def test_engine_many_requests_slot_reuse(setup):
         engine.submit(r)
     engine.run_until_done()
     assert all(r.done and len(r.out) == 4 for r in reqs)
+
+
+@pytest.mark.parametrize("layout", ["fixed", "auto"])
+def test_engine_sharded_matches_unsharded(setup, layout):
+    """The mesh/layout serving path (planner- or fixed-rule-sharded
+    params + cache) must decode exactly what the unsharded engine does."""
+    cfg, model, params = setup
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+
+    plain = Engine(cfg, params, batch_slots=2, max_len=32)
+    sharded = Engine(cfg, params, batch_slots=2, max_len=32,
+                     mesh=mesh, layout=layout)
+    if layout == "auto":
+        assert sharded.layout is not None       # planner actually ran
+    for eng in (plain, sharded):
+        req = Request(prompt=prompt, max_new=4)
+        eng.submit(req)
+        eng.run_until_done()
+        eng.result = req.out
+    assert plain.result == sharded.result
