@@ -6,6 +6,7 @@ import time
 import numpy as np
 
 from repro.algos import data, als_cg, autoencoder, glm, kmeans, l2svm, mlogreg
+from repro.core import plan_cache_stats
 from repro.core.codegen import PLAN_CACHE
 from .common import emit
 
@@ -34,7 +35,7 @@ def main() -> None:
         t0 = time.perf_counter()
         fn()
         total_s = time.perf_counter() - t0
-        st = PLAN_CACHE.stats
+        st = plan_cache_stats()
         emit(f"compile_{name}", total_s * 1e6,
              f"ops_compiled={st.misses},cache_hits={st.hits},"
              f"codegen_ms={st.codegen_time_s * 1e3:.1f}")

@@ -64,7 +64,7 @@ def _shardmap_execution() -> None:
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    from repro.core import fused, fusion_mode
+    from repro.core import fused
 
     n_dev = len(jax.devices())
     mesh = jax.make_mesh((n_dev,), ("data",),
@@ -83,9 +83,12 @@ def _shardmap_execution() -> None:
         out = ir.relu(1.0 - y * (X @ w))
         return (out ** 2).sum(), -1.0 * (X.T @ (out * y)) + 1e-3 * w
 
-    with fusion_mode("gen"):
-        jstep = jax.jit(lambda X, w, y: step(X, w, y))
-        loss, grad = jstep(X, w, y)
+    # staged path with the mesh threaded onto fused-operator I/O: the
+    # layout prices distributed side-input reads during selection and
+    # sharding-constrains the operands at execution.
+    op = step.trace(X, w, y).plan(mode="gen", layout=mesh).compile()
+    jstep = jax.jit(lambda X, w, y: op(X, w, y))
+    loss, grad = jstep(X, w, y)
     ref_out = jnp.maximum(1.0 - y * (X @ w), 0.0)
     ref = (jnp.sum(ref_out ** 2),
            -(X.T @ (ref_out * y)) + 1e-3 * w)

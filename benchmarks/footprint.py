@@ -7,7 +7,7 @@ n-op cell chain vs n materialized basic operators."""
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fused, fusion_mode, ir
+from repro.core import FusionContext, fused, ir
 from .common import emit, timeit
 
 
@@ -29,7 +29,7 @@ def main() -> None:
         f = chain_fn(n_ops)
         times = {}
         for mode in ("none", "gen"):
-            with fusion_mode(mode):
+            with FusionContext(mode=mode):
                 times[mode] = timeit(lambda: f(X, r))
         emit(f"footprint_chain{n_ops}_base", times["none"], "")
         emit(f"footprint_chain{n_ops}_gen", times["gen"],

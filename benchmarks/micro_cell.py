@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fused, fusion_mode
+from repro.core import FusionContext, fused
 from .common import emit, timeit
 
 SIZES = [(1000, 1000), (4000, 1000)]
@@ -22,7 +22,7 @@ def main() -> None:
         hand = timeit(lambda: jnp.sum(X * Y * Z))
         base_t = gen_t = None
         for mode in ("none", "gen"):
-            with fusion_mode(mode):
+            with FusionContext(mode=mode):
                 t = timeit(lambda: cell(X, Y, Z))
             if mode == "none":
                 base_t = t

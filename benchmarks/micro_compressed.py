@@ -5,7 +5,7 @@ only and aggregates via counts)."""
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fused, fusion_mode
+from repro.core import FusionContext, fused
 from repro.kernels.blocksparse import DictCompressed
 from .common import emit, timeit
 
@@ -23,7 +23,7 @@ def main() -> None:
         return (X ** 2).sum()
 
     hand = timeit(lambda: jnp.sum(Xd * Xd))
-    with fusion_mode("gen"):
+    with FusionContext(mode="gen"):
         ula = timeit(lambda: sumsq(Xd))
         cla = timeit(lambda: sumsq(Xc))
     emit("cla_sumsq_ula_hand", hand, "")

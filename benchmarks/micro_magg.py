@@ -4,7 +4,7 @@ one scan of X when Gen compiles a multi-aggregate."""
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fused, fusion_mode
+from repro.core import FusionContext, fused
 from .common import emit, timeit
 
 
@@ -21,7 +21,7 @@ def main() -> None:
     hand = timeit(lambda: (jnp.sum(X * Y), jnp.sum(X * Z), jnp.sum(X * X)))
     times = {}
     for mode in ("none", "fa", "gen"):
-        with fusion_mode(mode):
+        with FusionContext(mode=mode):
             times[mode] = timeit(lambda: magg(X, Y, Z))
     emit(f"magg3_{m}x{n}_base", times["none"], "")
     emit(f"magg3_{m}x{n}_hand", hand, "individual_aggs")

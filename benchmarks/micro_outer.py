@@ -5,7 +5,7 @@ materializes the dense m×n product (the paper's orders-of-magnitude gap)."""
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fused, fusion_mode, ir
+from repro.core import FusionContext, fused, ir
 from repro.kernels.blocksparse import BCSR
 from .common import emit, timeit
 
@@ -34,7 +34,7 @@ def main() -> None:
 
         hand = timeit(
             lambda: jnp.sum(jnp.abs(Xd) * jnp.log((U @ V.T) ** 2 + 1e-15)))
-        with fusion_mode("gen"):
+        with FusionContext(mode="gen"):
             gen = timeit(lambda: outer(Xs, U, V))
         emit(f"outer_sum_d{density}_dense", hand, "")
         emit(f"outer_sum_d{density}_gen_bcsr", gen,

@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fused, fusion_mode
+from repro.core import FusionContext, fused
 from .common import emit, timeit
 
 
@@ -21,7 +21,7 @@ def main() -> None:
         hand = timeit(lambda: X.T @ (X @ v))
         times = {}
         for mode in ("none", "gen"):
-            with fusion_mode(mode):
+            with FusionContext(mode=mode):
                 times[mode] = timeit(lambda: mmchain(X, v))
         emit(f"row_mmchain_{tag}_{m}x{n}_base", times["none"], "")
         emit(f"row_mmchain_{tag}_{m}x{n}_hand", hand, "")

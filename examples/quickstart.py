@@ -1,33 +1,34 @@
-"""Quickstart: the paper's optimizer on the ALS expression (Expression 1).
+"""Quickstart: the staged fusion API on the ALS expression (Expression 1).
+
+The optimizer pipeline is three explicit, inspectable stages —
+
+    fused(fn).trace(*operands)   -> Traced    (HOP DAG, static shapes)
+    Traced.plan(mode=, layout=)  -> Planned   (explore -> select; explain())
+    Planned.compile(pallas=)     -> Compiled  (generated fused operators)
+
+— with ``@fused`` call syntax as sugar over the same path, and
+``jax.grad`` working through compiled operators (the backward pass is
+planned too).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
+import json
+
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-from repro.core import ir, fused, fusion_mode
-from repro.core.select import plan
+from repro.core import FusionContext, fused, ir, plan_cache_stats
 from repro.kernels.blocksparse import BCSR
 
 
 def main():
-    # -- 1. declare the expression over typed matrices ----------------------
-    X = ir.matrix("X", (2048, 2048), sparsity=0.05)
-    U = ir.matrix("U", (2048, 32))
-    V = ir.matrix("V", (2048, 32))
-    r = ir.matrix("r", (2048, 1))
-    O = (ir.neq0(X) * (U @ V.T)) @ V + 1e-6 * U * r
-    graph = ir.Graph.build([O])
+    # -- 1. declare the expression over typed operands ------------------------
+    @fused(sparsity={"X": 0.1})
+    def als_update(X, U, V, r):
+        return (ir.neq0(X) * (U @ V.T)) @ V + 1e-6 * U * r
 
-    # -- 2. inspect the optimized fusion plan --------------------------------
-    for mode in ("gen", "fa", "fnr", "none"):
-        p = plan(graph, mode)
-        ops = [f"{s.ttype.letter if getattr(s, 'ttype', None) else 'basic'}"
-               f"@{s.root}" for s in p.specs]
-        print(f"{mode:5s} cost={p.cost:.6f}s plan: {' | '.join(ops)}")
-
-    # -- 3. execute through the fusion API ------------------------------------
     rng = np.random.default_rng(0)
     mask = np.kron(rng.random((16, 16)) < 0.1, np.ones((128, 128)))
     Xd = (rng.normal(size=(2048, 2048)) * mask).astype(np.float32)
@@ -38,16 +39,39 @@ def main():
         r=jnp.asarray(rng.normal(size=(2048, 1)), jnp.float32),
     )
 
-    @fused(sparsity={"X": 0.1})
-    def als_update(X, U, V, r):
-        return (ir.neq0(X) * (U @ V.T)) @ V + 1e-6 * U * r
+    # -- 2. stage: trace once, inspect every candidate arm's cost -------------
+    traced = als_update.trace(**binds)
+    planned = traced.plan(mode="gen")
+    report = planned.explain()
+    for cand in report["candidates"]:
+        mark = " <- selected" if cand["selected"] else ""
+        print(f"{cand['mode']:5s} cost={cand['cost']:.6f}s "
+              f"fused_ops={cand['n_fused']}{mark}")
+    print("winner operators:",
+          json.dumps(report["winner"]["operators"], indent=1))
 
-    with fusion_mode("gen"):
-        out = als_update(**binds)
+    # -- 3. compile + execute the generated fused operators -------------------
+    op = planned.compile()
+    out = op(**binds)
     ref = ((Xd != 0) * (binds["U"] @ binds["V"].T)) @ binds["V"] \
         + 1e-6 * binds["U"] * binds["r"]
     err = float(jnp.max(jnp.abs(out - ref)))
     print(f"fused output {out.shape}, max err vs dense reference: {err:.2e}")
+
+    # -- 4. sugar: the same operator through @fused call syntax ---------------
+    with FusionContext(mode="gen"):
+        out2 = als_update(**binds)
+    print("call-sugar max diff:", float(jnp.max(jnp.abs(out2 - out))))
+
+    # -- 5. differentiate a fused region: the backward pass is planned too ----
+    sq_loss = fused(lambda U, V: ((U @ V.T) ** 2).sum())
+    gU = jax.grad(lambda u: sq_loss(u, binds["V"])[0, 0])(binds["U"])
+    gref = 2.0 * (binds["U"] @ binds["V"].T) @ binds["V"]
+    print("jax.grad through fused op, max err:",
+          float(jnp.max(jnp.abs(gU - gref))))
+    st = plan_cache_stats()
+    print(f"plan cache: {st.hits} hits / {st.misses} misses "
+          f"({st.size} operators)")
 
 
 if __name__ == "__main__":

@@ -16,7 +16,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from .util import fs
-from repro.core import ir, fused, fusion_mode
+from repro.core import ir, fused, FusionContext
 from repro.kernels.blocksparse import BCSR
 from repro.kernels.ops import bcsr_matmul
 
@@ -76,7 +76,7 @@ def run(X: BCSR, rank: int = 20, lam: float = 1e-3, max_iter: int = 6,
     V = jnp.asarray(rng.normal(size=(n, rank)).astype(np.float32)) * 0.1
     XT = X.T
     losses = []
-    with fusion_mode(mode, pallas=pallas):
+    with FusionContext(mode=mode, pallas=pallas):
         for _ in range(max_iter):
             U = _cg_update(X, U, V, lam, max_inner, eps)
             V = _cg_update(XT, V, U, lam, max_inner, eps)

@@ -1,42 +1,31 @@
 """Two-layer sigmoid autoencoder (H1=500, H2=2, batch=512) — SystemML
 `autoencoder-2layer.dml`.
 
-Mini-batch SGD with momentum.  GEMMs stay basic operators; the fusion
-sites are the bias+activation chains (Cell) and the backward sprop chains
-δ ⊙ h ⊙ (1−h) (Cell), plus the loss aggregate — exactly the fusion profile
-the paper reports for AutoEncoder (solid but bounded speedups, §5.4).
+Mini-batch SGD with momentum.  The whole forward (4 GEMMs + the
+bias+activation Cell chains + the loss aggregate) is one fused region;
+the hand-written backprop (the δ ⊙ h ⊙ (1−h) sprop chains) is gone —
+``jax.grad`` of the fused forward plans the gradient DAG through
+explore → select, which regenerates exactly those sprop Cell chains as
+fused backward operators (the paper's AutoEncoder fusion profile, §5.4).
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .util import fs
-from repro.core import ir, fused, fusion_mode
+from repro.core import ir, fused, FusionContext
 
 
 @fused
-def _act(Z, b):
-    return ir.sigmoid(Z + b)
-
-
-@fused
-def _dact(D, H):
-    return D * H * (1.0 - H)      # sprop chain
-
-
-@fused
-def _mse(R):
-    return (R ** 2).sum()
-
-
-def _forward(X, Ws, bs, mode_fused=True):
-    H1 = _act(X @ Ws[0], bs[0])
-    H2 = _act(H1 @ Ws[1], bs[1])
-    H3 = _act(H2 @ Ws[2], bs[2])
-    O = H3 @ Ws[3] + bs[3]
-    return H1, H2, H3, O
+def _recon_loss(Xb, W1, b1, W2, b2, W3, b3, W4, b4):
+    """Σ (dec(enc(Xb)) − Xb)² — the full forward as one expression DAG."""
+    H1 = ir.sigmoid(Xb @ W1 + b1)
+    H2 = ir.sigmoid(H1 @ W2 + b2)
+    H3 = ir.sigmoid(H2 @ W3 + b3)
+    O = H3 @ W4 + b4
+    return ((O - Xb) ** 2).sum()
 
 
 def run(X, h1: int = 64, h2: int = 2, batch: int = 128, epochs: int = 1,
@@ -57,25 +46,16 @@ def run(X, h1: int = 64, h2: int = 2, batch: int = 128, epochs: int = 1,
     vel = [jnp.zeros_like(w) for w in Ws]
     losses = []
     steps = max(1, (m // batch) * epochs)
-    with fusion_mode(mode, pallas=pallas):
+    with FusionContext(mode=mode, pallas=pallas):
+        def loss_fn(Xb, Ws_, bs_):
+            return _recon_loss(Xb, Ws_[0], bs_[0], Ws_[1], bs_[1],
+                               Ws_[2], bs_[2], Ws_[3], bs_[3])[0, 0] / batch
+        val_grads = jax.value_and_grad(loss_fn, argnums=(1, 2))
         for step in range(steps):
             lo = (step * batch) % max(m - batch, 1)
             Xb = X[lo:lo + batch]
-            H1, H2, H3, O = _forward(Xb, Ws, bs)
-            R = O - Xb
-            losses.append(fs(_mse(R)) / batch)
-            # backward
-            D4 = 2.0 * R / batch
-            G4 = H3.T @ D4
-            D3 = _dact(D4 @ Ws[3].T, H3)
-            G3 = H2.T @ D3
-            D2 = _dact(D3 @ Ws[2].T, H2)
-            G2 = H1.T @ D2
-            D1 = _dact(D2 @ Ws[1].T, H1)
-            G1 = Xb.T @ D1
-            grads = [G1, G2, G3, G4]
-            dbs = [D1.sum(0, keepdims=True), D2.sum(0, keepdims=True),
-                   D3.sum(0, keepdims=True), D4.sum(0, keepdims=True)]
+            val, (grads, dbs) = val_grads(Xb, Ws, bs)
+            losses.append(float(val))
             for i in range(4):
                 vel[i] = mu * vel[i] - lr * grads[i]
                 Ws[i] = Ws[i] + vel[i]

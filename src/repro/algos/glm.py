@@ -13,7 +13,7 @@ import math
 import jax.numpy as jnp
 
 from .util import fs
-from repro.core import ir, fused, fusion_mode
+from repro.core import ir, fused, FusionContext
 
 _SQRT2 = math.sqrt(2.0)
 _SQRT2PI = math.sqrt(2.0 * math.pi)
@@ -57,7 +57,7 @@ def run(X, y, lam: float = 1e-3, max_outer: int = 8, max_inner: int = 10,
     m, n = X.shape
     beta = jnp.zeros((n, 1), jnp.float32)
     devs = []
-    with fusion_mode(mode, pallas=pallas):
+    with FusionContext(mode=mode, pallas=pallas):
         for _ in range(max_outer):
             eta = X @ beta
             w, r = _link_chain(eta, y)

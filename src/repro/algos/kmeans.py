@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import ir, fused, fusion_mode
+from repro.core import ir, fused, FusionContext
 
 
 @fused
@@ -33,7 +33,7 @@ def run(X, C0, max_iter: int = 20, eps: float = 1e-12, mode: str = "gen",
     k = C0.shape[0]
     C = C0
     wcss_hist = []
-    with fusion_mode(mode, pallas=pallas):
+    with FusionContext(mode=mode, pallas=pallas):
         xsq = _sq_rowsums(X)                       # constant across iters
         for _ in range(max_iter):
             XC = X @ C.T                           # basic GEMM

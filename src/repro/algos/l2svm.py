@@ -3,14 +3,20 @@
 Outer conjugate-direction iterations with an exact inner Newton line
 search.  Fusion sites: the hinge chain relu(1 − y⊙(Xw)) (Cell), the
 line-search and objective multi-aggregates (MAgg), and Xᵀ(out⊙y) (Row).
+
+The gradient is ``jax.grad`` of the fused objective: the backward pass is
+planned through explore → select, so ∇obj executes the same generated
+Row-template operator the hand-derived ``_grad`` expression pins in
+``tests/golden/plans.json`` (the parity harness keeps both in lockstep).
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from .util import fs
-from repro.core import ir, fused, fusion_mode
+from repro.core import ir, fused, FusionContext
 
 # fused regions ---------------------------------------------------------------
 
@@ -19,6 +25,16 @@ def _hinge(X, w, y):
     return ir.relu(1.0 - y * (X @ w))
 
 
+@fused
+def _objective_full(X, w, y, lam):
+    """0.5·Σ relu(1 − y⊙(Xw))² + 0.5·λ·Σ w² — differentiable fused forward;
+    jax.grad of this replaces the hand-written −Xᵀ(out⊙y) + λw."""
+    out = ir.relu(1.0 - y * (X @ w))
+    return 0.5 * (out ** 2).sum() + 0.5 * lam * (w ** 2).sum()
+
+
+# hand-derived gradient + split objective: golden-plan pins and the
+# jax.grad parity harness (tests/test_staged_api.py) — not used by run().
 @fused
 def _grad(X, out, y, w, lam):
     return -1.0 * (X.T @ (out * y)) + lam * w
@@ -44,8 +60,10 @@ def run(X, y, lam: float = 1e-3, max_iter: int = 20, eps: float = 1e-12,
     w = jnp.zeros((n, 1), jnp.float32)
     lam_s = jnp.full((1, 1), lam, jnp.float32)
     objs = []
-    with fusion_mode(mode, pallas=pallas):
-        g = _grad(X, _hinge(X, w, y), y, w, lam_s)
+    with FusionContext(mode=mode, pallas=pallas):
+        obj_grad = jax.value_and_grad(
+            lambda w_: _objective_full(X, w_, y, lam_s)[0, 0])
+        _, g = obj_grad(w)
         s = -g
         for _ in range(max_iter):
             Xs = X @ s                        # basic GEMV
@@ -55,10 +73,8 @@ def run(X, y, lam: float = 1e-3, max_iter: int = 20, eps: float = 1e-12,
             den = fs(den_t) + lam * float(jnp.sum(s * s))
             step = num / max(den, 1e-30)
             w = w + step * s
-            out = _hinge(X, w, y)
-            o1, o2 = _objective(out, w)
-            objs.append(0.5 * fs(o1) + 0.5 * lam * fs(o2))
-            g_new = _grad(X, out, y, w, lam_s)
+            val, g_new = obj_grad(w)          # fused forward + fused backward
+            objs.append(float(val))
             beta = float(jnp.sum(g_new * g_new)) / max(
                 float(jnp.sum(g * g)), 1e-30)
             s = -g_new + beta * s

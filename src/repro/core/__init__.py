@@ -4,12 +4,37 @@ Pipeline: IR (HOP DAG) → OFMC candidate exploration (memo table) →
 cost-based candidate selection (plan partitions, interesting points,
 MPSkipEnum) → code generation (CPlans → XLA/Pallas fused operators, plan
 cache).
+
+Public surface: the staged API (``fused(fn).trace(...).plan(...)
+.compile()``), its ``@fused`` call sugar, immutable
+:class:`FusionContext` scoping, layout-aware execution
+(:class:`FusionLayout`), and plan-cache introspection.  The module
+``__all__`` below is pinned by ``tests/test_api_surface.py`` — extending
+it is an explicit, reviewed act.
 """
 
 from . import ir
-from .api import Fused, fuse_exprs, fused, fusion_mode, current_config
+from .api import (Compiled, Fused, FusionInputError, Planned, Traced,
+                  fuse_exprs, fused)
+from .codegen import plan_cache_stats
+from .context import (FusionContext, current_config, current_context,
+                      fusion_mode)
 from .cost import CostParams, TPU_V5E
+from .grad import NonDifferentiableError
+from .layout import FusionLayout
 from .select import plan
 
-__all__ = ["ir", "Fused", "fused", "fuse_exprs", "fusion_mode",
-           "current_config", "CostParams", "TPU_V5E", "plan"]
+__all__ = [
+    # IR + planning entry points
+    "ir", "plan",
+    # staged pipeline
+    "Fused", "fused", "Traced", "Planned", "Compiled", "fuse_exprs",
+    # contexts
+    "FusionContext", "fusion_mode", "current_context", "current_config",
+    # layout-aware execution
+    "FusionLayout",
+    # cost model
+    "CostParams", "TPU_V5E",
+    # introspection + errors
+    "plan_cache_stats", "NonDifferentiableError", "FusionInputError",
+]

@@ -1,137 +1,462 @@
-"""Public fusion API.
+"""Public fusion API: the staged ``trace → plan → compile`` pipeline.
 
-``@fused`` traces a python function of :class:`Expr` arguments into a LinOp
-graph at first call (per shape/sparsity/mode signature), runs the
-three-phase optimizer (explore → select → codegen) and executes the
-generated plan.  Works under ``jax.jit`` — planning happens at trace time
-with static shapes (the analogue of SystemML's dynamic recompilation with
-known sizes), and compiled operators are memoized in the plan cache.
+The paper's three optimizer phases (candidate exploration, cost-based
+selection, code generation) are exposed as explicit, inspectable stages —
+the JAX-AOT-style analogue of SystemML separating compilation from
+execution:
 
-    @fused
-    def hinge(X, w, y):
-        return ir.relu(1 - y * (X @ w)).unary("pow2").sum()
+    hinge = fused(lambda X, w, y: ir.relu(1 - y * (X @ w)))
 
-    loss = hinge(Xarr, warr, yarr)                 # planned + fused
-    with fusion_mode("fnr"): loss = hinge(...)     # heuristic arm
+    traced   = hinge.trace(Xarr, warr, yarr)      # IR graph, static shapes
+    planned  = traced.plan(mode="gen")            # explore → select
+    print(planned.explain())                      # per-candidate cost report
+    op       = planned.compile(pallas="never")    # generated fused operators
+    out      = op(Xarr, warr, yarr)
+
+``@fused`` call syntax stays as sugar over the staged path: the wrapper
+traces/plans/compiles on first call per (shape, format, context) signature
+and memoizes the Compiled stage.
+
+Compiled fused operators are first-class JAX citizens:
+
+* **autodiff** — each dense call runs through a ``jax.custom_vjp`` whose
+  backward pass is *itself* planned through explore → select
+  (:mod:`repro.core.grad`), so ``jax.grad`` of a ``@fused`` region executes
+  generated fused operators in both directions.
+* **layouts** — ``plan(layout=mesh_or_FusionLayout)`` threads the PR-2
+  distributed layout rules onto operator inputs/outputs: reads of
+  model-sharded side inputs are costed at ICI bandwidth during selection,
+  and dense operands are sharding-constrained at execution
+  (:mod:`repro.core.layout`), so local and distributed execution share one
+  entry point.
+
+Operands may be 2-D matrices, 1-D vectors, or 0-D scalars; non-2-D inputs
+are canonicalized to column / 1×1 matrices for planning.  **Round-trip
+rule:** when a call passes any 1-D/0-D operand, outputs of shape ``(n, 1)``
+are returned as 1-D ``(n,)`` and ``(1, 1)`` outputs as 0-D scalars; calls
+made entirely with 2-D operands always return 2-D results.
+
+Contexts are immutable and explicitly scoped (:class:`FusionContext`);
+``fusion_mode(...)`` remains as derive-and-scope sugar.
 """
 
 from __future__ import annotations
 
-import contextlib
 import inspect
-import threading
 from dataclasses import dataclass, field, replace
 from typing import Callable, Optional
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.blocksparse import BCSR, DictCompressed
 from . import ir
 from .codegen import CompiledPlan, PLAN_CACHE, compile_plan
+from .context import (FusionContext, current_config, current_context,
+                      fusion_mode)
 from .cost import CostParams, TPU_V5E
-from .select import ExecPlan, plan as plan_graph
+from .grad import NonDifferentiableError, vjp_graph
+from .layout import FusionLayout, layout_cost_params
+from .select import ExecPlan, MODES, MultiAggSpec, plan as plan_graph
 
 
-@dataclass
-class FusionConfig:
-    mode: str = "gen"            # gen | fa | fnr | none
-    pallas: str = "never"        # never | interpret | tpu
-    params: CostParams = field(default_factory=lambda: TPU_V5E)
-
-
-_STATE = threading.local()
-
-
-def current_config() -> FusionConfig:
-    cfg = getattr(_STATE, "cfg", None)
-    if cfg is None:
-        cfg = FusionConfig()
-        _STATE.cfg = cfg
-    return cfg
-
-
-@contextlib.contextmanager
-def fusion_mode(mode: Optional[str] = None, pallas: Optional[str] = None,
-                params: Optional[CostParams] = None):
-    old = current_config()
-    new = replace(old)
-    if mode is not None:
-        new.mode = mode
-    if pallas is not None:
-        new.pallas = pallas
-    if params is not None:
-        new.params = params
-    _STATE.cfg = new
-    try:
-        yield new
-    finally:
-        _STATE.cfg = old
+class FusionInputError(TypeError):
+    """An operand cannot be lifted into the 2-D LinOp IR."""
 
 
 # --------------------------------------------------------------------------
+# operand canonicalization (1-D vectors / 0-D scalars → column / 1×1)
+# --------------------------------------------------------------------------
 
-def _signature(args: dict[str, object], cfg: FusionConfig):
-    sig = [cfg.mode, cfg.pallas]
-    for name, v in args.items():
-        if isinstance(v, BCSR):
-            sig.append((name, "bcsr", v.shape, v.bs, round(v.block_sparsity, 4)))
-        elif isinstance(v, DictCompressed):
-            sig.append((name, "dict", v.shape))
-        else:
-            sig.append((name, "dense", tuple(v.shape)))
-    return tuple(sig)
+def _canon_shape(name: str, v) -> tuple[tuple[int, int], int]:
+    """(canonical 2-D shape, original ndim) of one operand."""
+    if isinstance(v, (BCSR, DictCompressed)):
+        return tuple(v.shape), 2
+    if isinstance(v, (int, float)):
+        return (1, 1), 0
+    shape = tuple(getattr(v, "shape", None) or ())
+    if not hasattr(v, "shape"):
+        raise FusionInputError(
+            f"argument '{name}': expected an array, matrix, or scalar, "
+            f"got {type(v).__name__}")
+    if len(shape) == 2:
+        return shape, 2
+    if len(shape) == 1:
+        return (shape[0], 1), 1           # column-vector convention
+    if len(shape) == 0:
+        return (1, 1), 0
+    raise FusionInputError(
+        f"argument '{name}': expected 0-D, 1-D or 2-D, got shape {shape}")
+
+
+def _canon_value(name: str, v):
+    shape, nd = _canon_shape(name, v)
+    if nd == 2:
+        return v
+    if isinstance(v, (int, float)):
+        return jnp.full((1, 1), float(v), jnp.float32)
+    return jnp.reshape(v, shape)
+
+
+def _uncanon_output(out):
+    """Round-trip: column vectors → 1-D, 1×1 → 0-D (vector-world calls)."""
+    shape = getattr(out, "shape", ())
+    if shape == (1, 1):
+        return jnp.reshape(out, ())
+    if len(shape) == 2 and shape[1] == 1:
+        return jnp.reshape(out, (shape[0],))
+    return out
 
 
 def _as_expr_inputs(args: dict[str, object],
                     sparsity: dict[str, float]) -> dict[str, ir.Expr]:
     out = {}
     for name, v in args.items():
+        shape, _ = _canon_shape(name, v)
         if isinstance(v, BCSR):
             sp = sparsity.get(name, v.block_sparsity)
-            out[name] = ir.matrix(name, v.shape, sparsity=sp)
-        elif isinstance(v, DictCompressed):
-            out[name] = ir.matrix(name, v.shape,
-                                  sparsity=sparsity.get(name, 1.0))
         else:
-            shape = tuple(v.shape)
-            assert len(shape) == 2, f"{name}: expected 2-D, got {shape}"
-            out[name] = ir.matrix(name, shape,
-                                  sparsity=sparsity.get(name, 1.0))
+            sp = sparsity.get(name, 1.0)
+        out[name] = ir.matrix(name, shape, sparsity=sp)
     return out
 
 
+def _signature(args: dict[str, object], ctx: FusionContext):
+    sig: list = [ctx.key()]
+    for name, v in args.items():
+        if isinstance(v, BCSR):
+            sig.append((name, "bcsr", v.shape, v.bs,
+                        round(v.block_sparsity, 4)))
+        elif isinstance(v, DictCompressed):
+            sig.append((name, "dict", v.shape))
+        else:
+            shape, nd = _canon_shape(name, v)
+            sig.append((name, "dense", shape, nd))
+    return tuple(sig)
+
+
+# --------------------------------------------------------------------------
+# stage 1: Traced — the IR graph of the expression at static shapes
+# --------------------------------------------------------------------------
+
+@dataclass
+class Traced:
+    """Abstract trace of an expression function: the HOP DAG plus operand
+    metadata.  Planning-only — carries no array data."""
+
+    name: str
+    graph: ir.Graph
+    in_names: list[str]                    # fn-signature order
+    in_meta: dict[str, dict]               # name → {shape, format, sparsity}
+
+    def plan(self, mode: Optional[str] = None,
+             params: Optional[CostParams] = None,
+             layout=None,
+             context: Optional[FusionContext] = None) -> "Planned":
+        """Run explore → select under an explicit or the current context.
+
+        ``layout`` accepts a :class:`FusionLayout`, or any mesh exposing
+        ``.shape``/``.axis_names`` (auto-fits the PR-2 sharding rules to
+        this trace's operand shapes), or None.
+        """
+        ctx = context if context is not None else current_context()
+        if mode is not None:
+            ctx = ctx.with_(mode=mode)
+        if params is not None:
+            ctx = ctx.with_(params=params)
+        if layout is not None:
+            if not isinstance(layout, FusionLayout):
+                shapes = {name: m["shape"]
+                          for name, m in self.in_meta.items()}
+                shapes.update({f"__out{i}": o.shape
+                               for i, o in enumerate(self.graph.outputs)})
+                layout = FusionLayout.auto(layout, shapes)
+            ctx = ctx.with_(layout=layout)
+        eff = layout_cost_params(ctx.layout, self.graph, ctx.params)
+        eplan = plan_graph(self.graph, ctx.mode, eff)
+        return Planned(self, ctx, eplan)
+
+
+# --------------------------------------------------------------------------
+# stage 2: Planned — a selected ExecPlan with costs and an explain() report
+# --------------------------------------------------------------------------
+
+def _spec_signature(graph: ir.Graph, spec) -> dict:
+    def label(nid: int) -> str:
+        n = graph.by_id[nid]
+        return n.name if n.name else n.op
+
+    if isinstance(spec, MultiAggSpec):
+        return {"template": "MAGG(multi)",
+                "root": [graph.by_id[r].op for r in spec.roots],
+                "inputs": sorted(label(i) for i in spec.inputs),
+                "driver": None,
+                "n_covered": sum(len(p.cover) for p in spec.parts)}
+    return {"template": spec.ttype.name if spec.ttype is not None else "basic",
+            "root": graph.by_id[spec.root].op,
+            "inputs": sorted(label(i) for i in spec.inputs),
+            "driver": label(spec.driver) if spec.driver is not None else None,
+            "n_covered": len(spec.cover)}
+
+
+@dataclass
+class Planned:
+    """One selected execution plan for a Traced expression."""
+
+    traced: Traced
+    context: FusionContext
+    eplan: ExecPlan
+    _bwd: Optional["Planned"] = field(default=None, repr=False)
+
+    @property
+    def cost(self) -> float:
+        return self.eplan.cost
+
+    def fused_signatures(self) -> list[dict]:
+        return [_spec_signature(self.eplan.graph, s)
+                for s in self.eplan.fused_specs()]
+
+    def candidates(self) -> list[dict]:
+        """Cost every selection arm for this trace (the per-candidate
+        report, analogous to the layout planner's candidate sweep)."""
+        eff = layout_cost_params(self.context.layout, self.traced.graph,
+                                 self.context.params)
+        out = []
+        for m in MODES:
+            p = self.eplan if m == self.context.mode \
+                else plan_graph(self.traced.graph, m, eff)
+            out.append({"mode": m, "cost": p.cost,
+                        "n_fused": len(p.fused_specs()),
+                        "n_operators": len(p.specs),
+                        "selected": m == self.context.mode})
+        return out
+
+    def backward(self) -> "Planned":
+        """Plan the gradient DAG through the same explore → select pipeline
+        (fused backward operators).  Raises NonDifferentiableError when the
+        forward graph has an op with no VJP rule."""
+        if self._bwd is None:
+            ct_names, grads = vjp_graph(self.eplan.graph)
+            fwd_inputs = [n.name for n in self.eplan.graph.inputs()]
+            bgraph = ir.Graph.build([grads[n] for n in fwd_inputs])
+            in_meta = dict(self.traced.in_meta)
+            for name, o in zip(ct_names, self.eplan.graph.outputs):
+                in_meta[name] = {"shape": o.shape, "format": "dense",
+                                 "sparsity": 1.0}
+            btr = Traced(self.traced.name + ":vjp", bgraph,
+                         list(self.traced.in_names) + ct_names, in_meta)
+            self._bwd = Planned(
+                btr, self.context,
+                plan_graph(bgraph, self.context.mode,
+                           layout_cost_params(self.context.layout, bgraph,
+                                              self.context.params)))
+            self._bwd.grad_names = fwd_inputs   # type: ignore[attr-defined]
+        return self._bwd
+
+    def explain(self, include_backward: bool = False) -> dict:
+        """Structured plan report (same shape as the layout planner's
+        ``experiments/layouts`` JSON: winner + candidates + stats)."""
+        ex, en = self.eplan.explore_stats, self.eplan.enum_stats
+        report = {
+            "expression": self.traced.name,
+            "mode": self.context.mode,
+            "inputs": {n: {"shape": list(m["shape"]),
+                           "format": m["format"],
+                           "sparsity": round(float(m["sparsity"]), 4)}
+                       for n, m in self.traced.in_meta.items()},
+            "winner": {
+                "cost": self.eplan.cost,
+                "n_operators": len(self.eplan.specs),
+                "operators": self.fused_signatures(),
+            },
+            "candidates": self.candidates(),
+            "stats": {
+                "explored_operators": ex.operators if ex else 0,
+                "memo_entries": ex.entries_kept if ex else 0,
+                "partitions": en.partitions if en else 0,
+                "enum_points": en.points_total if en else 0,
+                "plans_costed": en.plans_costed if en else 0,
+            },
+            "layout": None,
+        }
+        if self.context.layout is not None:
+            lay = self.context.layout
+            report["layout"] = {
+                "mesh": {a: int(lay.mesh.shape[a])
+                         for a in lay.mesh.axis_names},
+                "specs": {n: [list(e) if isinstance(e, tuple) else e
+                              for e in tuple(s)]
+                          for n, s in sorted(lay.specs.items())},
+            }
+        if include_backward:
+            bwd = self.backward()
+            report["backward"] = {
+                "cost": bwd.cost,
+                "n_operators": len(bwd.eplan.specs),
+                "operators": bwd.fused_signatures(),
+            }
+        return report
+
+    def compile(self, pallas: Optional[str] = None) -> "Compiled":
+        """Stage 3: bind the plan to generated operators (plan cache)."""
+        ctx = self.context if pallas is None \
+            else self.context.with_(pallas=pallas)
+        return Compiled(replace(self, context=ctx))
+
+
+# --------------------------------------------------------------------------
+# stage 3: Compiled — an executable, differentiable fused operator
+# --------------------------------------------------------------------------
+
+class Compiled:
+    """Executable fused operator: runs the CompiledPlan, constrains operand
+    layouts, and registers a ``jax.custom_vjp`` whose backward pass is the
+    planned gradient DAG."""
+
+    def __init__(self, planned: Planned):
+        self.planned = planned
+        ctx = planned.context
+        self._cplan: CompiledPlan = compile_plan(planned.eplan,
+                                                 pallas=ctx.pallas)
+        self._n_outs = len(planned.eplan.graph.outputs)
+        self._vjp_fn = None
+        self._bwd_compiled: Optional[CompiledPlan] = None
+
+    # -- execution ----------------------------------------------------------
+    def _run_plain(self, bound: dict):
+        lay = self.planned.context.layout
+        if lay is not None:
+            bound = {n: lay.apply(n, v) for n, v in bound.items()}
+        outs = self._cplan(bound)
+        if lay is not None:
+            if isinstance(outs, tuple):
+                outs = tuple(lay.apply(f"__out{i}", o)
+                             for i, o in enumerate(outs))
+            else:
+                outs = lay.apply("__out0", outs)
+        return outs
+
+    def _get_bwd(self) -> tuple[CompiledPlan, list[str], list[str]]:
+        bwd = self.planned.backward()
+        if self._bwd_compiled is None:
+            self._bwd_compiled = compile_plan(
+                bwd.eplan, pallas=self.planned.context.pallas)
+        ct_names = [n for n in bwd.traced.in_names if n.startswith("__ct")]
+        return self._bwd_compiled, bwd.grad_names, ct_names  # type: ignore
+
+    def _build_vjp(self):
+        import jax
+        names = list(self.planned.traced.in_names)
+
+        def run(*arrs):
+            return self._run_plain(dict(zip(names, arrs)))
+
+        @jax.custom_vjp
+        def call(*arrs):
+            return run(*arrs)
+
+        def fwd(*arrs):
+            return run(*arrs), arrs          # residuals: primal inputs only
+
+        def bwd(res, ct):
+            bwd_plan, grad_names, ct_names = self._get_bwd()
+            cts = ct if isinstance(ct, (tuple, list)) else (ct,)
+            binds = dict(zip(names, res))
+            binds.update({n: jnp.asarray(c, jnp.float32)
+                          for n, c in zip(ct_names, cts)})
+            grads = bwd_plan(binds)
+            if not isinstance(grads, tuple):
+                grads = (grads,)
+            by_name = dict(zip(grad_names, grads))
+            return tuple(by_name.get(n) if n in by_name
+                         else jnp.zeros_like(res[i])
+                         for i, n in enumerate(names))
+
+        call.defvjp(fwd, bwd)
+        return call
+
+    # -- calling ------------------------------------------------------------
+    def explain(self, include_backward: bool = False) -> dict:
+        return self.planned.explain(include_backward=include_backward)
+
+    def _bind(self, args, kwargs) -> dict:
+        bound = dict(zip(self.planned.traced.in_names, args))
+        bound.update(kwargs)
+        return bound
+
+    def __call__(self, *args, **kwargs):
+        bound = self._bind(args, kwargs)
+        vector_world = any(
+            _canon_shape(n, v)[1] < 2 for n, v in bound.items())
+        canon = {n: _canon_value(n, v) for n, v in bound.items()}
+        dense = all(not isinstance(v, (BCSR, DictCompressed))
+                    for v in canon.values())
+        if dense:
+            if self._vjp_fn is None:
+                self._vjp_fn = self._build_vjp()
+            names = self.planned.traced.in_names
+            outs = self._vjp_fn(*[canon[n] for n in names])
+        else:
+            outs = self._run_plain(canon)
+        if vector_world:
+            if isinstance(outs, tuple):
+                return tuple(_uncanon_output(o) for o in outs)
+            return _uncanon_output(outs)
+        return outs
+
+
+# --------------------------------------------------------------------------
+# the @fused wrapper — sugar over trace → plan → compile
+# --------------------------------------------------------------------------
+
 class Fused:
-    """Callable wrapper planning+executing a traced expression function."""
+    """Callable wrapper staging an expression function on demand.
+
+    Each distinct (shape, format, context) signature is traced, planned,
+    and compiled once; subsequent calls reuse the Compiled stage (and,
+    transitively, the structural plan cache)."""
 
     def __init__(self, fn: Callable, sparsity: Optional[dict] = None):
         self.fn = fn
         self.sparsity = dict(sparsity or {})
         self.names = list(inspect.signature(fn).parameters)
-        self._plans: dict[tuple, tuple[ExecPlan, CompiledPlan]] = {}
+        self._staged: dict[tuple, Compiled] = {}
 
-    def plan_for(self, **shaped_args) -> ExecPlan:
-        cfg = current_config()
-        exprs = _as_expr_inputs(shaped_args, self.sparsity)
+    # -- staged entry points ------------------------------------------------
+    def trace(self, *args, **kwargs) -> Traced:
+        """Stage 1: trace with abstract or concrete operands (anything with
+        ``.shape`` — arrays, ShapeDtypeStructs, BCSR — or python scalars)."""
+        bound = dict(zip(self.names, args))
+        bound.update(kwargs)
+        exprs = _as_expr_inputs(bound, self.sparsity)
         outs = self.fn(**exprs)
         if not isinstance(outs, (tuple, list)):
             outs = (outs,)
         graph = ir.Graph.build(list(outs))
-        return plan_graph(graph, cfg.mode, cfg.params)
+        meta = {}
+        for name, v in bound.items():
+            shape, _ = _canon_shape(name, v)
+            fmt = ("bcsr" if isinstance(v, BCSR) else
+                   "dict" if isinstance(v, DictCompressed) else "dense")
+            meta[name] = {"shape": shape, "format": fmt,
+                          "sparsity": exprs[name].node.sparsity}
+        return Traced(getattr(self.fn, "__name__", "<expr>"), graph,
+                      list(bound), meta)
 
+    def plan_for(self, **shaped_args) -> ExecPlan:
+        """Trace + plan under the current context (inspection helper)."""
+        return self.trace(**shaped_args).plan().eplan
+
+    # -- call sugar ---------------------------------------------------------
     def __call__(self, *args, **kwargs):
-        cfg = current_config()
+        ctx = current_context()
         bound = dict(zip(self.names, args))
         bound.update(kwargs)
-        key = _signature(bound, cfg)
-        entry = self._plans.get(key)
-        if entry is None:
-            eplan = self.plan_for(**bound)
-            compiled = compile_plan(eplan, pallas=cfg.pallas)
-            self._plans[key] = (eplan, compiled)
-        else:
-            eplan, compiled = entry
-        return compiled(bound)
+        key = _signature(bound, ctx)
+        compiled = self._staged.get(key)
+        if compiled is None:
+            compiled = self.trace(**bound).plan(context=ctx).compile()
+            self._staged[key] = compiled
+        return compiled(**bound)
 
 
 def fused(fn: Optional[Callable] = None, *, sparsity: Optional[dict] = None):
@@ -142,9 +467,22 @@ def fused(fn: Optional[Callable] = None, *, sparsity: Optional[dict] = None):
 
 def fuse_exprs(outputs, bindings: dict[str, object],
                mode: Optional[str] = None):
-    """One-shot: plan + execute a hand-built expression DAG."""
-    cfg = current_config()
+    """One-shot: plan + execute a hand-built expression DAG (honors the
+    scoped context's layout the same way the staged path does)."""
+    ctx = current_context()
+    if mode is not None:
+        ctx = ctx.with_(mode=mode)
     graph = ir.Graph.build(outputs if isinstance(outputs, (list, tuple))
                            else [outputs])
-    eplan = plan_graph(graph, mode or cfg.mode, cfg.params)
-    return compile_plan(eplan, pallas=cfg.pallas)(bindings)
+    eff = layout_cost_params(ctx.layout, graph, ctx.params)
+    eplan = plan_graph(graph, ctx.mode, eff)
+    if ctx.layout is not None:
+        bindings = {n: ctx.layout.apply(n, v) for n, v in bindings.items()}
+    outs = compile_plan(eplan, pallas=ctx.pallas)(bindings)
+    if ctx.layout is not None:
+        if isinstance(outs, tuple):
+            outs = tuple(ctx.layout.apply(f"__out{i}", o)
+                         for i, o in enumerate(outs))
+        else:
+            outs = ctx.layout.apply("__out0", outs)
+    return outs

@@ -12,8 +12,10 @@ CLA-compressed).
 
 from __future__ import annotations
 
+import threading
 import time
-from dataclasses import dataclass, field
+from collections import OrderedDict
+from dataclasses import dataclass, field, replace
 from typing import Callable, Optional
 
 import jax.numpy as jnp
@@ -35,6 +37,8 @@ from .select import ExecPlan, MultiAggSpec
 class PlanCacheStats:
     hits: int = 0
     misses: int = 0
+    evictions: int = 0
+    size: int = 0
     codegen_time_s: float = 0.0
 
     @property
@@ -43,8 +47,15 @@ class PlanCacheStats:
 
 
 class PlanCache:
-    def __init__(self) -> None:
-        self._ops: dict[str, "GeneratedOp"] = {}
+    """Thread-safe LRU cache of generated operators keyed by structural
+    CPlan hash.  Bounded: least-recently-used operators are evicted past
+    ``maxsize`` (XLA still holds its own executable cache; this bounds the
+    python-side operator objects)."""
+
+    def __init__(self, maxsize: int = 512) -> None:
+        self.maxsize = int(maxsize)
+        self._ops: "OrderedDict[str, GeneratedOp]" = OrderedDict()
+        self._lock = threading.RLock()
         self.stats = PlanCacheStats()
 
     def get_or_build(self, graph: Graph, spec) -> tuple["GeneratedOp", "CPlan"]:
@@ -54,22 +65,39 @@ class PlanCache:
         t0 = time.perf_counter()
         cplan = build_cplan(graph, spec)
         key = cplan.cache_key()
-        hit = self._ops.get(key)
-        if hit is not None:
-            self.stats.hits += 1
-            return hit, cplan
-        op = GeneratedOp(cplan)
-        self._ops[key] = op
-        self.stats.misses += 1
-        self.stats.codegen_time_s += time.perf_counter() - t0
-        return op, cplan
+        with self._lock:
+            hit = self._ops.get(key)
+            if hit is not None:
+                self._ops.move_to_end(key)
+                self.stats.hits += 1
+                return hit, cplan
+            op = GeneratedOp(cplan)
+            self._ops[key] = op
+            while len(self._ops) > self.maxsize:
+                self._ops.popitem(last=False)
+                self.stats.evictions += 1
+            self.stats.misses += 1
+            self.stats.size = len(self._ops)
+            self.stats.codegen_time_s += time.perf_counter() - t0
+            return op, cplan
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._ops)
 
     def clear(self) -> None:
-        self._ops.clear()
-        self.stats = PlanCacheStats()
+        with self._lock:
+            self._ops.clear()
+            self.stats = PlanCacheStats()
 
 
 PLAN_CACHE = PlanCache()
+
+
+def plan_cache_stats() -> PlanCacheStats:
+    """Snapshot of the global plan-cache counters (public API)."""
+    with PLAN_CACHE._lock:
+        return replace(PLAN_CACHE.stats, size=len(PLAN_CACHE._ops))
 
 
 # --------------------------------------------------------------------------
@@ -114,10 +142,14 @@ def _eval_basic(graph: Graph, node: Node, env: dict[int, object]):
     ins = [env[i.nid] if i.op != "lit" else
            jnp.asarray(float(i.attrs["value"]), jnp.float32).reshape(1, 1)
            for i in node.inputs]
-    if node.is_matmul and isinstance(ins[0], BCSR) and not node.ta:
+    if node.is_matmul and isinstance(ins[0], BCSR):
         b = ins[1]
         b = b.todense() if hasattr(b, "todense") else b
-        return kops.bcsr_matmul(ins[0], b.T if node.tb else b)
+        b = b.T if node.tb else b
+        # ta=True: transpose the block structure (BCSR.T is exact and
+        # O(nnz)) instead of densifying the sparse operand.
+        a = ins[0].T if node.ta else ins[0]
+        return kops.bcsr_matmul(a, b)
     if node.op == "mul" and isinstance(ins[0], BCSR) \
             and not isinstance(ins[1], BCSR) \
             and getattr(ins[1], "shape", None) == ins[0].shape:

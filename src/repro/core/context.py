@@ -1,0 +1,110 @@
+"""Immutable fusion contexts (replaces the old thread-local FusionConfig).
+
+A :class:`FusionContext` bundles every knob the staged pipeline consumes —
+selection mode, Pallas lowering policy, cost-model parameters, and an
+optional distributed :class:`~repro.core.layout.FusionLayout`.  Contexts are
+frozen: "changing" one produces a new object via :meth:`FusionContext.with_`.
+
+Scoping is explicit.  A context is itself a context manager that pushes
+onto a thread-local *stack of immutable objects* (the only mutable state),
+so library code can read :func:`current_context` without threading an
+argument through every call:
+
+    ctx = FusionContext(mode="fa", pallas="interpret")
+    with ctx:
+        loss = hinge(X, w, y)          # planned under ctx
+
+``fusion_mode(...)`` remains as sugar deriving a child context from the
+current one — existing call sites keep working unchanged.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional
+
+from .cost import CostParams, TPU_V5E
+
+_STACK = threading.local()
+
+
+@dataclass(frozen=True)
+class FusionContext:
+    """Immutable bundle of planning/execution knobs.
+
+    mode    -- candidate-selection arm: gen | fa | fnr | none
+    pallas  -- kernel lowering: never | interpret | tpu
+    params  -- analytical cost-model constants (roofline bandwidths)
+    layout  -- optional FusionLayout: shards fused-operator inputs/outputs
+               over a mesh and re-prices distributed side-input reads
+    """
+
+    mode: str = "gen"
+    pallas: str = "never"
+    params: CostParams = field(default_factory=lambda: TPU_V5E)
+    layout: Optional[Any] = None        # FusionLayout (kept Any: no jax dep)
+
+    def with_(self, **kw) -> "FusionContext":
+        """Derived context with the given fields replaced."""
+        return replace(self, **kw)
+
+    def key(self) -> tuple:
+        """Hashable identity used in plan-cache signatures — includes the
+        cost-model constants so custom CostParams re-plan instead of
+        silently reusing a plan selected under different bandwidths."""
+        lay = self.layout.key() if self.layout is not None else None
+        p = self.params
+        pkey = (p.read_bw, p.write_bw, p.compute_bw, p.dtype_bytes,
+                p.sparse_idx_bytes, p.max_fused_inputs,
+                tuple(sorted(p.input_read_bw.items())))
+        return (self.mode, self.pallas, pkey, lay)
+
+    # -- scoping ------------------------------------------------------------
+    def __enter__(self) -> "FusionContext":
+        _stack().append(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        top = _stack().pop()
+        assert top is self, "unbalanced FusionContext scopes"
+
+
+def _stack() -> list:
+    s = getattr(_STACK, "stack", None)
+    if s is None:
+        s = []
+        _STACK.stack = s
+    return s
+
+
+_DEFAULT = FusionContext()
+
+
+def current_context() -> FusionContext:
+    """Innermost scoped context, or the process-wide default."""
+    s = _stack()
+    return s[-1] if s else _DEFAULT
+
+
+# backwards-compatible alias (pre-staged-API name)
+current_config = current_context
+
+
+@contextlib.contextmanager
+def fusion_mode(mode: Optional[str] = None, pallas: Optional[str] = None,
+                params: Optional[CostParams] = None, layout: Any = None):
+    """Sugar: scope a context derived from the current one."""
+    kw = {}
+    if mode is not None:
+        kw["mode"] = mode
+    if pallas is not None:
+        kw["pallas"] = pallas
+    if params is not None:
+        kw["params"] = params
+    if layout is not None:
+        kw["layout"] = layout
+    ctx = current_context().with_(**kw)
+    with ctx:
+        yield ctx

@@ -113,6 +113,40 @@ def find_cut_sets(graph: Graph, part: Partition,
 
 # -- the enumeration algorithm -------------------------------------------------
 
+#: partitions above this many interesting points skip exact enumeration and
+#: use greedy local search instead.  The paper's forward DAGs stay well
+#: under this; planned *gradient* DAGs (repro.core.grad) can exceed it —
+#: 2^|M'| scanning is intractable there and any assignment is numerically
+#: exact, so bounded search only trades plan cost, never correctness.
+EXACT_ENUM_MAX_POINTS = 16
+
+
+def _greedy_enum(graph: Graph, memo: MemoTable, part: Partition,
+                 params: CostParams, pts: list[Point],
+                 st: EnumStats) -> tuple[tuple[bool, ...], float]:
+    """First-improvement local search over materialization assignments:
+    start from maximal fusion (the opening heuristic) and flip single
+    points while it pays, a bounded number of passes."""
+    n = len(pts)
+    q = [False] * n
+    best = partition_cost(graph, memo, part, set(), params)
+    st.plans_costed += 1
+    for _ in range(3):                       # bounded improvement passes
+        improved = False
+        for i in range(n):
+            q[i] = not q[i]
+            banned = {pts[k] for k in range(n) if q[k]}
+            c = partition_cost(graph, memo, part, banned, params, ub=best)
+            st.plans_costed += 1
+            if c < best:
+                best, improved = c, True
+            else:
+                q[i] = not q[i]
+        if not improved:
+            break
+    return tuple(q), best
+
+
 def mp_skip_enum(graph: Graph, memo: MemoTable, part: Partition,
                  params: CostParams, points: Optional[list[Point]] = None,
                  use_structural: bool = True,
@@ -122,6 +156,9 @@ def mp_skip_enum(graph: Graph, memo: MemoTable, part: Partition,
     st = stats if stats is not None else EnumStats()
     pts = list(part.points if points is None else points)
     n = len(pts)
+    if n > EXACT_ENUM_MAX_POINTS:
+        # pts is in caller order here (no cut-set reordering happened yet)
+        return _greedy_enum(graph, memo, part, params, pts, st)
     if n == 0:
         c = partition_cost(graph, memo, part, set(), params)
         st.plans_costed += 1

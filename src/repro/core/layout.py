@@ -1,0 +1,108 @@
+"""Layout-aware fused execution: thread the PR-2 distributed layout rules
+onto fused-operator inputs/outputs.
+
+A :class:`FusionLayout` maps fused-region input/output names to
+rank-matched, divisibility-checked ``PartitionSpec``s built with the same
+``repro.dist.sharding`` fitting primitives the layout planner validates
+candidates with: matrix rows shard over the data/FSDP axes, columns over
+the tensor-parallel axis, vectors and scalars degrade to replication.
+
+Two consumers, one entry point (the paper's hybrid local/distributed
+plans):
+
+* **planning** — :func:`layout_cost_params` re-prices reads of
+  column-sharded (model-parallel) side inputs at ICI all-gather bandwidth
+  (``core.cost.CostParams.input_read_bw``, paper §4.4), so candidate
+  selection sees distributed read costs.  This accepts any mesh exposing
+  ``.shape``/``.axis_names`` — including the planner's abstract
+  ``LogicalMesh`` — so plans can be costed for a 256-chip pod from a CPU
+  container.
+* **execution** — :meth:`FusionLayout.apply` places/constrains dense
+  operands with ``NamedSharding`` on a *real* ``jax.sharding.Mesh``; the
+  fused computation then runs SPMD under ``jit``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Mapping, Optional
+
+from repro import hw as _hw
+from .cost import CostParams
+from .ir import Graph
+
+
+def _mesh_sig(mesh) -> tuple:
+    return tuple((a, int(mesh.shape[a])) for a in mesh.axis_names)
+
+
+@dataclass(frozen=True)
+class FusionLayout:
+    """Mesh + per-name PartitionSpecs for a fused region's inputs/outputs."""
+
+    mesh: Any
+    specs: Any            # Mapping[str, PartitionSpec-like]
+
+    @staticmethod
+    def auto(mesh, shapes: Mapping[str, tuple[int, int]]) -> "FusionLayout":
+        """Fit the PR-1/2 sharding rules to a dict of 2-D operand shapes."""
+        from repro.dist import sharding as sh
+        specs = {name: sh._spec(mesh, shape,
+                                (sh.fsdp_axes(mesh), sh.tp_axis(mesh)))
+                 for name, shape in shapes.items()}
+        return FusionLayout(mesh, specs)
+
+    def key(self) -> tuple:
+        return (_mesh_sig(self.mesh),
+                tuple(sorted((n, tuple(s)) for n, s in self.specs.items())))
+
+    def spec_for(self, name: str):
+        return self.specs.get(name)
+
+    def _shards_cols(self, name: str, shape: tuple[int, int]) -> bool:
+        spec = self.specs.get(name)
+        if spec is None:
+            return False
+        entries = tuple(spec)
+        return len(entries) >= 2 and entries[1] is not None
+
+    def apply(self, name: str, value):
+        """Constrain/place one dense operand on its spec (identity when the
+        name has no spec, the value is sparse, or the mesh is abstract)."""
+        spec = self.specs.get(name)
+        if spec is None or hasattr(value, "todense"):
+            return value
+        import jax
+        from jax.sharding import Mesh, NamedSharding
+        if not isinstance(self.mesh, Mesh):
+            return value                  # abstract mesh: cost-only layout
+        sharding = NamedSharding(self.mesh, spec)
+        if isinstance(value, jax.core.Tracer):
+            return jax.lax.with_sharding_constraint(value, sharding)
+        return jax.device_put(value, sharding)
+
+
+def layout_cost_params(layout: Optional[FusionLayout], graph: Graph,
+                       params: CostParams) -> CostParams:
+    """Cost parameters with distributed read-bandwidth overrides.
+
+    Inputs whose layout shards the column (contraction-side) dimension must
+    be all-gathered across the model axis before a row-local fused operator
+    can consume them — their reads are priced at ICI bandwidth instead of
+    HBM bandwidth (the paper's "different read bandwidths for inputs of
+    resulting distributed operations").
+    """
+    if layout is None:
+        return params
+    overrides = dict(params.input_read_bw)
+    for node in graph.inputs():
+        if node.name and layout._shards_cols(node.name, node.shape):
+            overrides[node.nid] = _hw.TPU_V5E.ici_bw
+    if not overrides:
+        return params
+    return CostParams(read_bw=params.read_bw, write_bw=params.write_bw,
+                      compute_bw=params.compute_bw,
+                      dtype_bytes=params.dtype_bytes,
+                      sparse_idx_bytes=params.sparse_idx_bytes,
+                      input_read_bw=overrides,
+                      max_fused_inputs=params.max_fused_inputs)

@@ -7,6 +7,12 @@ variant-tagged dry-run stats (and flop probes where compute changes).
 explicit variant keys (``act``, ``serve_params``) still win over the
 planner's choices, so each arm measures exactly what it names.
 
+The ``fusion: "gen"`` arm routes the CE loss through the staged fusion
+pipeline (``launch/train._fused_lse``: trace → plan → compile once per
+shape); since PR 3 its *backward* pass is the planned gradient DAG via
+the operator's custom_vjp, so the arm measures generated fused operators
+in both directions of the train step.
+
   PYTHONPATH=src python -m repro.launch.hillclimb [--layout auto]
 """
 

@@ -31,18 +31,27 @@ class TrainConfig:
     opt: adamw.OptConfig = adamw.OptConfig()
 
 
-def _fused_lse(logits2d: jnp.ndarray) -> jnp.ndarray:
+def _fused_lse(logits2d: jnp.ndarray, mode: str) -> jnp.ndarray:
     """log-sum-exp rows through the fusion planner (Row template:
-    rowmax → sub → exp → rowsums → log → add)."""
+    rowmax → sub → exp → rowsums → log → add), staged explicitly:
+    trace → plan → compile once per (shape, mode), then reuse the
+    Compiled operator.  Differentiable: the training backward pass runs
+    the planned gradient DAG via the operator's custom_vjp."""
     from repro.core import fused, ir
 
-    if not hasattr(_fused_lse, "_op"):
+    if not hasattr(_fused_lse, "_lse"):
         @fused
         def _lse(L):
             m = L.rowmaxs()
             return ir.log(ir.exp(L - m).rowsums()) + m
-        _fused_lse._op = _lse
-    return _fused_lse._op(logits2d)
+        _fused_lse._lse = _lse
+        _fused_lse._ops = {}
+    key = (tuple(logits2d.shape), mode)
+    op = _fused_lse._ops.get(key)
+    if op is None:
+        op = _fused_lse._lse.trace(logits2d).plan(mode=mode).compile()
+        _fused_lse._ops[key] = op
+    return op(logits2d)
 
 
 def make_loss_fn(model: LM, cfg: ModelConfig, tc: TrainConfig):
@@ -66,11 +75,9 @@ def make_loss_fn(model: LM, cfg: ModelConfig, tc: TrainConfig):
 def _ce(logits, targets, tc: TrainConfig):
     if tc.fusion == "off":
         return lm_loss(logits, targets)
-    from repro.core import fusion_mode
     V = logits.shape[-1]
     flat = logits.reshape(-1, V).astype(jnp.float32)
-    with fusion_mode(tc.fusion):
-        lse = _fused_lse(flat)
+    lse = _fused_lse(flat, tc.fusion)
     tgt = jnp.take_along_axis(flat, targets.reshape(-1, 1), axis=-1)
     return jnp.mean(lse - tgt)
 

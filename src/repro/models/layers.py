@@ -17,10 +17,19 @@ from repro.configs.base import ModelConfig
 
 
 def norm(x: jnp.ndarray, scale: jnp.ndarray, kind: str = "rmsnorm",
-         bias: Optional[jnp.ndarray] = None, eps: float = 1e-6):
-    """Row-template chain: per-row second-moment + scale."""
+         bias: Optional[jnp.ndarray] = None, eps: float = 1e-6,
+         fusion: Optional[str] = None):
+    """Row-template chain: per-row second-moment + scale.
+
+    ``fusion`` routes the rmsnorm chain through the paper's planner as a
+    staged fused operator (mode string, e.g. "gen"); the default path is
+    plain jnp, which XLA fuses — both execute identical CNode programs."""
     xf = x.astype(jnp.float32)
-    if kind == "rmsnorm":
+    if kind == "rmsnorm" and fusion is not None:
+        flat = xf.reshape(-1, x.shape[-1])
+        out = _fused_rmsnorm(flat, scale.astype(jnp.float32).reshape(1, -1),
+                             eps, fusion).reshape(xf.shape)
+    elif kind == "rmsnorm":
         ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
         out = xf * jax.lax.rsqrt(ms + eps) * (1.0 + scale.astype(jnp.float32))
     else:
@@ -31,6 +40,29 @@ def norm(x: jnp.ndarray, scale: jnp.ndarray, kind: str = "rmsnorm",
         if bias is not None:
             out = out + bias.astype(jnp.float32)
     return out.astype(x.dtype)
+
+
+def _fused_rmsnorm(flat: jnp.ndarray, scale_row: jnp.ndarray, eps: float,
+                   mode: str) -> jnp.ndarray:
+    """Staged fused rmsnorm over (rows, d): planned once per (shape, mode);
+    differentiable through the operator's planned-backward custom_vjp."""
+    from repro.core import fused, ir
+
+    if not hasattr(_fused_rmsnorm, "_fn"):
+        @fused
+        def _rms(X, s, eps_s):
+            ms = (X ** 2).rowmeans()
+            return X * ir.sqrt(ms + eps_s).unary("recip") * (1.0 + s)
+        _fused_rmsnorm._fn = _rms
+        _fused_rmsnorm._ops = {}
+    key = (tuple(flat.shape), mode)
+    op = _fused_rmsnorm._ops.get(key)
+    if op is None:
+        eps_spec = jax.ShapeDtypeStruct((1, 1), jnp.float32)
+        op = _fused_rmsnorm._fn.trace(flat, scale_row, eps_spec) \
+                               .plan(mode=mode).compile()
+        _fused_rmsnorm._ops[key] = op
+    return op(flat, scale_row, jnp.full((1, 1), eps, jnp.float32))
 
 
 def mlp(x: jnp.ndarray, p: dict, kind: str) -> jnp.ndarray:

@@ -1,0 +1,50 @@
+"""Public API-surface snapshot: ``repro.core.__all__`` is a contract.
+
+A PR that adds, renames, or drops a public symbol must edit this list
+consciously — silent drift fails here first.
+"""
+
+import repro.core as core
+
+PINNED_ALL = [
+    "Compiled",
+    "CostParams",
+    "Fused",
+    "FusionContext",
+    "FusionInputError",
+    "FusionLayout",
+    "NonDifferentiableError",
+    "Planned",
+    "TPU_V5E",
+    "Traced",
+    "current_config",
+    "current_context",
+    "fuse_exprs",
+    "fused",
+    "fusion_mode",
+    "ir",
+    "plan",
+    "plan_cache_stats",
+]
+
+
+def test_public_surface_pinned():
+    assert sorted(core.__all__) == PINNED_ALL
+
+
+def test_all_symbols_importable():
+    for name in core.__all__:
+        assert hasattr(core, name), name
+
+
+def test_staged_types_are_the_call_sugar_types():
+    """The @fused sugar routes through the same staged objects the explicit
+    API returns — one pipeline, two spellings."""
+    import numpy as np
+    f = core.fused(lambda X: (X * 2.0).sum())
+    traced = f.trace(np.zeros((4, 4), np.float32))
+    planned = traced.plan(mode="gen")
+    compiled = planned.compile()
+    assert isinstance(traced, core.Traced)
+    assert isinstance(planned, core.Planned)
+    assert isinstance(compiled, core.Compiled)

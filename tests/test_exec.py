@@ -150,3 +150,23 @@ def test_plan_cache_hits():
         g(X, Y)
     assert PLAN_CACHE.stats.misses == before      # structural hash hit
     assert PLAN_CACHE.stats.hits >= 1
+
+
+@pytest.mark.parametrize("mode", ["none", "gen"])
+def test_bcsr_transposed_matmul_basic_op(mode):
+    """Regression: a BCSR left operand with ta=True must run the
+    transposed block-sparse path (not silent densification) and agree
+    with the dense reference."""
+    from repro.kernels.blocksparse import BCSR
+
+    rng2 = np.random.default_rng(5)
+    mask = np.kron(rng2.random((4, 3)) < 0.5, np.ones((16, 16)))
+    Xd = (rng2.normal(size=(64, 48)) * mask).astype(np.float32)
+    X = BCSR.from_dense(Xd, bs=16)
+    B = arr(64, 8)
+    # X.T @ B with the transpose folded into the matmul's ta attr
+    f = fused(lambda X, B: X.T @ B)
+    with fusion_mode(mode):
+        got = f(X, B)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(Xd.T @ B),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,108 @@
+"""Plan-cache hardening: thread-safety, LRU bounds, public stats, and the
+positional re-binding path (a cached operator serving a structurally-equal
+plan from a *different* graph with different node ids)."""
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fused, fusion_mode, plan_cache_stats
+from repro.core.codegen import PLAN_CACHE, PlanCache
+
+rng = np.random.default_rng(3)
+
+
+def arr(*shape, pos=False):
+    a = rng.normal(size=shape).astype(np.float32)
+    if pos:
+        a = np.abs(a) + 0.5
+    return jnp.asarray(a)
+
+
+def test_positional_rebinding_across_equal_graphs():
+    """Two separately-traced, structurally-equal graphs have different node
+    ids; the second must *hit* the cache yet bind its own inputs in its own
+    positions (codegen's positional re-binding).  The expression is
+    order-sensitive (A/B − A), so a mis-bound operand changes the result."""
+    PLAN_CACHE.clear()
+    A, B = arr(24, 12), arr(24, 12, pos=True)
+    f = fused(lambda A, B: (A / B - A).rowsums())
+    g = fused(lambda P, Q: (P / Q - P).rowsums())   # fresh trace, new nids
+    with fusion_mode("gen"):
+        out_f = f(A, B)
+        misses_after_f = plan_cache_stats().misses
+        out_g = g(B, A)            # swapped operands: Q=A, P=B
+    st = plan_cache_stats()
+    assert st.misses == misses_after_f      # structural hit, no rebuild
+    assert st.hits >= 1
+    ref_f = jnp.sum(A / B - A, axis=1, keepdims=True)
+    ref_g = jnp.sum(B / A - B, axis=1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(ref_f),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(out_g), np.asarray(ref_g),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_lru_eviction_bound():
+    cache = PlanCache(maxsize=4)
+    from repro.core import ir
+    from repro.core.select import plan as plan_graph
+    for i in range(8):
+        X = ir.matrix("X", (16 + i, 8))        # distinct shapes → new keys
+        graph = ir.Graph.build([(X * 2.0).sum()])
+        eplan = plan_graph(graph, "gen")
+        for spec in eplan.fused_specs():
+            cache.get_or_build(graph, spec)
+    assert len(cache) <= 4
+    assert cache.stats.evictions >= 4
+    assert cache.stats.size <= 4
+
+
+def test_get_or_build_thread_safe():
+    cache = PlanCache(maxsize=64)
+    from repro.core import ir
+    from repro.core.select import plan as plan_graph
+    graphs = []
+    for i in range(8):
+        X = ir.matrix("X", (32, 8 + i))
+        graphs.append(ir.Graph.build([(X * 3.0 + 1.0).sum()]))
+    plans = [plan_graph(g, "gen") for g in graphs]
+    errors = []
+
+    def worker():
+        try:
+            for g, p in zip(graphs, plans):
+                for spec in p.fused_specs():
+                    op, cp = cache.get_or_build(g, spec)
+                    assert op.cplan.cache_key() == cp.cache_key()
+        except Exception as e:        # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    # 8 distinct operators built exactly once despite 8 racing threads
+    assert cache.stats.misses == 8
+    assert cache.stats.hits == 8 * 8 - 8
+
+
+def test_plan_cache_stats_snapshot():
+    PLAN_CACHE.clear()
+    X = arr(10, 10)
+    f = fused(lambda X: (X * X).sum())
+    with fusion_mode("gen"):
+        f(X)
+    st = plan_cache_stats()
+    assert st.misses >= 1 and st.size >= 1
+    assert st.total == st.hits + st.misses
+    # snapshot, not a live reference
+    before = st.misses
+    with fusion_mode("gen"):
+        fused(lambda Y: (Y + 1.0).sum())(X)
+    assert st.misses == before
+    assert plan_cache_stats().misses >= before
