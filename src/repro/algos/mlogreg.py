@@ -44,6 +44,21 @@ def _nll_obj(X, B, Y):
 
 
 @fused
+def _nll_obj_reg(X, B, Y, lam):
+    """−Σ Y⊙log P + 0.5·λ·Σ B² — the full regularized objective as one
+    fused region.  Its HOP DAG has two plan partitions with different
+    natural placements: the X-row-parallel softmax/NLL chain (mesh-wide
+    under a layout, psum epilogue) and the tiny B-space regularizer
+    multi-aggregate (local) — the canonical hybrid plan."""
+    Z = X @ B
+    m = Z.rowmaxs()
+    E = ir.exp(Z - m)
+    P = E / E.rowsums()
+    return (0.0 - (Y * ir.log(P + 1e-30)).sum()
+            + 0.5 * lam * (B ** 2).sum())
+
+
+@fused
 def _hvp(X, v, P):
     k = P.shape[1]
     Q = P * (X @ v)
@@ -51,7 +66,7 @@ def _hvp(X, v, P):
 
 
 # hand-derived gradient + NLL aggregate: golden-plan pins and the jax.grad
-# parity harness — run() now differentiates _nll_obj instead.
+# parity harness — run() differentiates the regularized _nll_obj_reg.
 @fused
 def _grad(X, P, Y):
     return X.T @ (P - Y)
@@ -63,22 +78,26 @@ def _nll_terms(P, Y):
 
 
 def run(X, Y, lam: float = 1e-3, max_outer: int = 10, max_inner: int = 20,
-        eps: float = 1e-12, mode: str = "gen", pallas: str = "never"):
-    """Returns (B, negative log-likelihood per outer iteration)."""
+        eps: float = 1e-12, mode: str = "gen", pallas: str = "never",
+        layout=None):
+    """Returns (B, regularized objective per outer iteration).
+
+    ``layout`` (a mesh or ``FusionLayout``) plans every fused region
+    hybrid local/distributed — see :func:`_nll_obj_reg`."""
     if mode == "hand":
         return _run_hand(X, Y, lam, max_outer, max_inner, eps)
     m, n = X.shape
     k = Y.shape[1]
     B = jnp.zeros((n, k), jnp.float32)
+    lam_s = jnp.full((1, 1), lam, jnp.float32)
     nlls = []
-    with FusionContext(mode=mode, pallas=pallas):
-        nll_grad = jax.value_and_grad(lambda B_: _nll_obj(X, B_, Y)[0, 0])
+    with FusionContext(mode=mode, pallas=pallas, layout=layout):
+        obj_grad = jax.value_and_grad(
+            lambda B_: _nll_obj_reg(X, B_, Y, lam_s)[0, 0])
         for _ in range(max_outer):
             P = _probs(X, B)
-            val, Gd = nll_grad(B)         # fused forward + fused backward
-            nll = float(val) + 0.5 * lam * float(jnp.sum(B * B))
-            nlls.append(nll)
-            G = Gd + lam * B
+            val, G = obj_grad(B)          # fused forward + fused backward
+            nlls.append(float(val))       # == NLL + 0.5·λ‖B‖² as before
             # CG solve (H + lam I) d = -G with fused HVPs
             d = jnp.zeros_like(B)
             r = -G

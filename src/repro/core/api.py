@@ -55,7 +55,7 @@ from .context import (FusionContext, current_config, current_context,
                       fusion_mode)
 from .cost import CostParams, TPU_V5E
 from .grad import NonDifferentiableError, vjp_graph
-from .layout import FusionLayout, layout_cost_params
+from .layout import FusionLayout, ensure_layout, layout_cost_params
 from .select import ExecPlan, MODES, MultiAggSpec, plan as plan_graph
 
 
@@ -68,7 +68,14 @@ class FusionInputError(TypeError):
 # --------------------------------------------------------------------------
 
 def _canon_shape(name: str, v) -> tuple[tuple[int, int], int]:
-    """(canonical 2-D shape, original ndim) of one operand."""
+    """(canonical 2-D shape, original ndim) of one operand.
+
+    This is where the 1-D/0-D canonicalization is *enforced*: the LinOp
+    IR is strictly 2-D, so a 1-D vector of length n plans as an (n, 1)
+    column matrix and a 0-D / python scalar as (1, 1).  The original
+    ndim is kept so :func:`_uncanon_output` can round-trip results
+    (column → 1-D, 1×1 → 0-D) for calls that passed any non-2-D operand;
+    ranks above 2 raise :class:`FusionInputError`."""
     if isinstance(v, (BCSR, DictCompressed)):
         return tuple(v.shape), 2
     if isinstance(v, (int, float)):
@@ -98,7 +105,10 @@ def _canon_value(name: str, v):
 
 
 def _uncanon_output(out):
-    """Round-trip: column vectors → 1-D, 1×1 → 0-D (vector-world calls)."""
+    """The output half of the canonicalization round-trip, applied by
+    :meth:`Compiled.__call__` iff the call passed any 1-D/0-D operand
+    ("vector-world"): (n, 1) columns → 1-D ``(n,)``, (1, 1) → 0-D.
+    All-2-D calls skip this and always get 2-D results back."""
     shape = getattr(out, "shape", ())
     if shape == (1, 1):
         return jnp.reshape(out, ())
@@ -152,11 +162,30 @@ class Traced:
              params: Optional[CostParams] = None,
              layout=None,
              context: Optional[FusionContext] = None) -> "Planned":
-        """Run explore → select under an explicit or the current context.
+        """Stage 2: run explore → select, returning a :class:`Planned`.
 
-        ``layout`` accepts a :class:`FusionLayout`, or any mesh exposing
-        ``.shape``/``.axis_names`` (auto-fits the PR-2 sharding rules to
-        this trace's operand shapes), or None.
+        Arguments (each optional, overriding the scoped
+        :class:`FusionContext`):
+
+        mode
+            Selection arm: ``"gen"`` (cost-based MPSkipEnum — the paper's
+            contribution), ``"fa"`` (fuse-all), ``"fnr"``
+            (fuse-no-redundancy), or ``"none"`` (no fusion).
+        params
+            :class:`CostParams` cost-model constants (roofline
+            bandwidths, byte widths, the fused-input constraint).
+        layout
+            A :class:`FusionLayout`, or any mesh exposing
+            ``.shape``/``.axis_names`` — including the abstract
+            ``repro.dist.LogicalMesh``, so no devices are required —
+            which is auto-fitted to this trace's operand shapes via the
+            PR-1/2 sharding rules.  With a layout, selection prices
+            every fused operator on both the local and the distributed
+            arm (``shard_map`` body + collective epilogue) and the
+            induced plan is *hybrid*: per-operator placement is reported
+            by :meth:`Planned.explain`.
+        context
+            Explicit base context (defaults to :func:`current_context`).
         """
         ctx = context if context is not None else current_context()
         if mode is not None:
@@ -164,13 +193,14 @@ class Traced:
         if params is not None:
             ctx = ctx.with_(params=params)
         if layout is not None:
-            if not isinstance(layout, FusionLayout):
-                shapes = {name: m["shape"]
-                          for name, m in self.in_meta.items()}
-                shapes.update({f"__out{i}": o.shape
-                               for i, o in enumerate(self.graph.outputs)})
-                layout = FusionLayout.auto(layout, shapes)
             ctx = ctx.with_(layout=layout)
+        if ctx.layout is not None and not isinstance(ctx.layout,
+                                                     FusionLayout):
+            # bare mesh (incl. via the scoped context): fit the sharding
+            # rules to this trace's operand and output shapes
+            shapes = {name: m["shape"] for name, m in self.in_meta.items()}
+            ctx = ctx.with_(layout=ensure_layout(ctx.layout, self.graph,
+                                                 extra_shapes=shapes))
         eff = layout_cost_params(ctx.layout, self.graph, ctx.params)
         eplan = plan_graph(self.graph, ctx.mode, eff)
         return Planned(self, ctx, eplan)
@@ -212,8 +242,21 @@ class Planned:
         return self.eplan.cost
 
     def fused_signatures(self) -> list[dict]:
-        return [_spec_signature(self.eplan.graph, s)
-                for s in self.eplan.fused_specs()]
+        """Structural signature of every selected fused operator.  Under a
+        mesh layout each signature also carries the local/distributed
+        decision: ``placement``, the collective ``epilogue``, and the
+        modeled per-device ``collective_bytes`` (ring all-reduce of the
+        epilogue plus side-input all-gathers)."""
+        out = []
+        for s in self.eplan.fused_specs():
+            sig = _spec_signature(self.eplan.graph, s)
+            pl = getattr(s, "placement", None)
+            if pl is not None:
+                sig["placement"] = pl.arm
+                sig["epilogue"] = pl.epilogue
+                sig["collective_bytes"] = int(round(pl.collective_bytes))
+            out.append(sig)
+        return out
 
     def candidates(self) -> list[dict]:
         """Cost every selection arm for this trace (the per-candidate
@@ -254,7 +297,18 @@ class Planned:
 
     def explain(self, include_backward: bool = False) -> dict:
         """Structured plan report (same shape as the layout planner's
-        ``experiments/layouts`` JSON: winner + candidates + stats)."""
+        ``experiments/layouts`` JSON: winner + candidates + stats).
+
+        Keys: ``expression``, ``mode``, ``inputs`` (shape/format/
+        sparsity per operand), ``winner`` (cost, operator count, and one
+        signature per fused operator — see :meth:`fused_signatures`),
+        ``candidates`` (every selection arm costed on this trace),
+        ``stats`` (exploration/enumeration counters), and ``layout``
+        (mesh + PartitionSpecs, or None).  Under a mesh layout a
+        ``distributed`` summary is added: row-shard axes and degree, the
+        local/distributed operator split, and total modeled collective
+        volume.  ``include_backward=True`` appends the planned gradient
+        DAG's report (see :meth:`backward`)."""
         ex, en = self.eplan.explore_stats, self.eplan.enum_stats
         report = {
             "expression": self.traced.name,
@@ -287,6 +341,17 @@ class Planned:
                               for e in tuple(s)]
                           for n, s in sorted(lay.specs.items())},
             }
+            ops = report["winner"]["operators"]
+            n_dist = sum(1 for o in ops
+                         if o.get("placement") == "distributed")
+            report["distributed"] = {
+                "row_axes": list(lay.row_axes()),
+                "devices": lay.row_devices(),
+                "n_fused_local": len(ops) - n_dist,
+                "n_fused_distributed": n_dist,
+                "collective_bytes": sum(o.get("collective_bytes", 0)
+                                        for o in ops),
+            }
         if include_backward:
             bwd = self.backward()
             report["backward"] = {
@@ -297,7 +362,18 @@ class Planned:
         return report
 
     def compile(self, pallas: Optional[str] = None) -> "Compiled":
-        """Stage 3: bind the plan to generated operators (plan cache)."""
+        """Stage 3: bind the plan to generated operators.
+
+        ``pallas`` overrides the context's kernel-lowering policy:
+        ``"never"`` (XLA-fused trace, the default), ``"interpret"``
+        (Pallas template kernels in interpreter mode — CPU-safe
+        validation), or ``"tpu"``.  Generated operators come from the
+        global structural plan cache (:func:`plan_cache_stats`), so
+        structurally-equal plans — retraced shapes, other expressions
+        with the same skeleton — reuse compiled operators.  The returned
+        :class:`Compiled` is callable on arrays and differentiable
+        (``jax.custom_vjp`` whose backward is the *planned* gradient
+        DAG)."""
         ctx = self.context if pallas is None \
             else self.context.with_(pallas=pallas)
         return Compiled(replace(self, context=ctx))
@@ -316,7 +392,8 @@ class Compiled:
         self.planned = planned
         ctx = planned.context
         self._cplan: CompiledPlan = compile_plan(planned.eplan,
-                                                 pallas=ctx.pallas)
+                                                 pallas=ctx.pallas,
+                                                 layout=ctx.layout)
         self._n_outs = len(planned.eplan.graph.outputs)
         self._vjp_fn = None
         self._bwd_compiled: Optional[CompiledPlan] = None
@@ -339,7 +416,8 @@ class Compiled:
         bwd = self.planned.backward()
         if self._bwd_compiled is None:
             self._bwd_compiled = compile_plan(
-                bwd.eplan, pallas=self.planned.context.pallas)
+                bwd.eplan, pallas=self.planned.context.pallas,
+                layout=self.planned.context.layout)
         ct_names = [n for n in bwd.traced.in_names if n.startswith("__ct")]
         return self._bwd_compiled, bwd.grad_names, ct_names  # type: ignore
 
@@ -384,6 +462,13 @@ class Compiled:
         return bound
 
     def __call__(self, *args, **kwargs):
+        """Execute on concrete operands (positional or by name).
+
+        Dense calls run through the ``custom_vjp`` wrapper, so the result
+        is ``jax.grad``-able; calls with sparse/compressed operands take
+        the direct dispatch path.  Any 1-D/0-D operand puts the call in
+        "vector world": outputs round-trip back through
+        :func:`_uncanon_output`."""
         bound = self._bind(args, kwargs)
         vector_world = any(
             _canon_shape(n, v)[1] < 2 for n, v in bound.items())
@@ -460,6 +545,29 @@ class Fused:
 
 
 def fused(fn: Optional[Callable] = None, *, sparsity: Optional[dict] = None):
+    """Wrap an expression function as a stageable fused region.
+
+    ``fn`` is a python function over :mod:`repro.core.ir` expressions
+    (operands arrive as IR matrices; ``+ * @ .sum() ir.relu …`` build the
+    HOP DAG).  The returned :class:`Fused` wrapper offers two spellings
+    of the same pipeline:
+
+    * **staged** — ``f.trace(*operands)`` → :class:`Traced`, then
+      ``.plan(mode=, params=, layout=)`` → :class:`Planned`, then
+      ``.compile(pallas=)`` → :class:`Compiled`, each stage inspectable
+      (``Planned.explain()`` is the cost report);
+    * **call sugar** — ``f(*arrays)`` traces/plans/compiles on first use
+      per (shape, format, context) signature and memoizes the Compiled
+      stage.
+
+    Operands may be 2-D matrices (dense, ``BCSR``, ``DictCompressed``),
+    1-D vectors, or 0-D scalars — see :func:`_canon_shape` for the
+    canonicalization and round-trip rule.  ``sparsity`` optionally maps
+    operand names to assumed densities for planning.
+
+    Usable bare (``@fused``) or with arguments
+    (``@fused(sparsity={"X": 0.05})``).
+    """
     if fn is None:
         return lambda f: Fused(f, sparsity=sparsity)
     return Fused(fn, sparsity=sparsity)
@@ -474,11 +582,14 @@ def fuse_exprs(outputs, bindings: dict[str, object],
         ctx = ctx.with_(mode=mode)
     graph = ir.Graph.build(outputs if isinstance(outputs, (list, tuple))
                            else [outputs])
+    if ctx.layout is not None and not isinstance(ctx.layout, FusionLayout):
+        ctx = ctx.with_(layout=ensure_layout(ctx.layout, graph))
     eff = layout_cost_params(ctx.layout, graph, ctx.params)
     eplan = plan_graph(graph, ctx.mode, eff)
     if ctx.layout is not None:
         bindings = {n: ctx.layout.apply(n, v) for n, v in bindings.items()}
-    outs = compile_plan(eplan, pallas=ctx.pallas)(bindings)
+    outs = compile_plan(eplan, pallas=ctx.pallas,
+                        layout=ctx.layout)(bindings)
     if ctx.layout is not None:
         if isinstance(outs, tuple):
             outs = tuple(ctx.layout.apply(f"__out{i}", o)

@@ -95,7 +95,17 @@ PLAN_CACHE = PlanCache()
 
 
 def plan_cache_stats() -> PlanCacheStats:
-    """Snapshot of the global plan-cache counters (public API)."""
+    """Snapshot of the global plan-cache counters (public API).
+
+    Returns a :class:`PlanCacheStats` value (not a live view) with
+    ``hits`` / ``misses`` / ``total`` (get-or-build calls), ``evictions``
+    (LRU past the 512-operator bound), ``size`` (operators currently
+    cached), and ``codegen_time_s`` (cumulative CPlan-build time on
+    misses).  The cache keys operators by *structural* CPlan hash, so a
+    hit means some structurally-equal plan — any expression, any
+    trace — already generated the operator.  Useful assertions:
+    ``stats.total`` grows when a backward pass compiles, ``misses`` stays
+    flat across re-traces of the same shapes."""
     with PLAN_CACHE._lock:
         return replace(PLAN_CACHE.stats, size=len(PLAN_CACHE._ops))
 
@@ -166,10 +176,39 @@ def _eval_basic(graph: Graph, node: Node, env: dict[int, object]):
 class CompiledPlan:
     """Executable form of an ExecPlan: run specs in dependency order,
     freeing intermediates when their last consumer has run (the paper's
-    'fewer materialized intermediates' at the plan level)."""
+    'fewer materialized intermediates' at the plan level).
+
+    When the plan was selected under a mesh layout, fused operators whose
+    placement is ``"distributed"`` execute their generated body inside
+    ``shard_map`` over the layout's real mesh with the template's
+    collective epilogue (:mod:`repro.kernels.distributed`); everything
+    else — and every operator when the mesh is abstract or an operand is
+    sparse — runs the local generated operator.  One plan, hybrid
+    execution."""
     plan: ExecPlan
     pallas: str = "never"
     cache: PlanCache = field(default_factory=lambda: PLAN_CACHE)
+    #: FusionLayout the plan was selected under (None: local-only)
+    layout: Optional[object] = None
+    #: per-spec-index compiled shard_map callables (False: not realizable)
+    _dist_fns: dict = field(default_factory=dict, repr=False)
+
+    def _dist_call(self, idx: int, spec, cplan, env: dict[int, object]):
+        """Run one distributed-placed operator, or None to fall back."""
+        pl = getattr(spec, "placement", None)
+        if pl is None or pl.arm != "distributed" or self.layout is None:
+            return None
+        vals = [env[b.nid] for b in cplan.binds]
+        if any(hasattr(v, "todense") for v in vals):
+            return None                    # sparse operand: local fallback
+        fn = self._dist_fns.get(idx)
+        if fn is None:
+            from repro.kernels.distributed import build_dist_fn
+            fn = build_dist_fn(cplan, getattr(self.layout, "mesh", None), pl)
+            self._dist_fns[idx] = fn if fn is not None else False
+        if not fn:
+            return None
+        return fn(*vals)
 
     def __call__(self, bindings: dict[str, object]):
         graph = self.plan.graph
@@ -188,10 +227,12 @@ class CompiledPlan:
             if isinstance(spec, MultiAggSpec) or (
                     isinstance(spec, FusedOpSpec) and spec.fused):
                 op, my_cplan = self.cache.get_or_build(graph, spec)
-                # positional re-binding: cached operator's nids ≠ ours
-                op_env = {ob.nid: env[mb.nid] for ob, mb in
-                          zip(op.cplan.binds, my_cplan.binds)}
-                out = op(op_env, pallas=self.pallas)
+                out = self._dist_call(idx, spec, my_cplan, env)
+                if out is None:
+                    # positional re-binding: cached operator's nids ≠ ours
+                    op_env = {ob.nid: env[mb.nid] for ob, mb in
+                              zip(op.cplan.binds, my_cplan.binds)}
+                    out = op(op_env, pallas=self.pallas)
                 if isinstance(spec, MultiAggSpec):
                     for k, r in enumerate(spec.roots):
                         env[r] = out[k].reshape(1, 1)
@@ -218,5 +259,6 @@ def _last_uses(plan: ExecPlan) -> dict[int, list[int]]:
     return out
 
 
-def compile_plan(plan: ExecPlan, pallas: str = "never") -> CompiledPlan:
-    return CompiledPlan(plan, pallas=pallas)
+def compile_plan(plan: ExecPlan, pallas: str = "never",
+                 layout=None) -> CompiledPlan:
+    return CompiledPlan(plan, pallas=pallas, layout=layout)

@@ -32,13 +32,31 @@ _STACK = threading.local()
 
 @dataclass(frozen=True)
 class FusionContext:
-    """Immutable bundle of planning/execution knobs.
+    """Immutable bundle of every knob the staged pipeline consumes.
 
-    mode    -- candidate-selection arm: gen | fa | fnr | none
-    pallas  -- kernel lowering: never | interpret | tpu
-    params  -- analytical cost-model constants (roofline bandwidths)
-    layout  -- optional FusionLayout: shards fused-operator inputs/outputs
-               over a mesh and re-prices distributed side-input reads
+    Fields
+    ------
+    mode : str
+        Candidate-selection arm — ``"gen"`` (cost-based MPSkipEnum, the
+        paper's contribution), ``"fa"`` (fuse-all heuristic), ``"fnr"``
+        (fuse-no-redundancy), or ``"none"`` (every operator basic).
+    pallas : str
+        Kernel lowering policy — ``"never"`` (XLA only), ``"interpret"``
+        (Pallas kernels in interpreter mode, CPU-safe), or ``"tpu"``.
+    params : CostParams
+        Analytical cost-model constants (roofline bandwidths, byte
+        widths, the fused-input constraint).
+    layout : FusionLayout | mesh | None
+        Distributed layout for fused-operator inputs/outputs.  A bare
+        mesh (anything exposing ``.shape``/``.axis_names``, including the
+        abstract ``repro.dist.LogicalMesh``) is auto-fitted per trace.
+        With a layout set, planning enumerates local × distributed
+        placement per fused operator (hybrid plans) and execution on a
+        real mesh runs distributed operators under ``shard_map``.
+
+    A context is itself a context manager: ``with FusionContext(...):``
+    scopes it onto a thread-local stack that :func:`current_context`
+    reads; :meth:`with_` derives a modified copy (contexts are frozen).
     """
 
     mode: str = "gen"
@@ -52,14 +70,16 @@ class FusionContext:
 
     def key(self) -> tuple:
         """Hashable identity used in plan-cache signatures — includes the
-        cost-model constants so custom CostParams re-plan instead of
-        silently reusing a plan selected under different bandwidths."""
-        lay = self.layout.key() if self.layout is not None else None
+        cost-model constants (and any distributed geometry) so custom
+        CostParams re-plan instead of silently reusing a plan selected
+        under different bandwidths."""
+        from .layout import layout_signature
         p = self.params
         pkey = (p.read_bw, p.write_bw, p.compute_bw, p.dtype_bytes,
                 p.sparse_idx_bytes, p.max_fused_inputs,
-                tuple(sorted(p.input_read_bw.items())))
-        return (self.mode, self.pallas, pkey, lay)
+                tuple(sorted(p.input_read_bw.items())),
+                p.dist.signature() if p.dist is not None else None)
+        return (self.mode, self.pallas, pkey, layout_signature(self.layout))
 
     # -- scoping ------------------------------------------------------------
     def __enter__(self) -> "FusionContext":

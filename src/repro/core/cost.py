@@ -33,6 +33,59 @@ from .templates import TType
 
 # -- hardware constants (shared substrate: repro.hw, TPU v5e target) ---------
 
+@dataclass(frozen=True)
+class DistParams:
+    """Row-partitioned execution geometry for the distributed cost arm.
+
+    Derived from a :class:`~repro.core.layout.FusionLayout` by
+    :func:`~repro.core.layout.layout_cost_params`: the mesh's data/FSDP
+    axes become the row-shard group, and per graph-input shard factors are
+    read off the layout's PartitionSpec trees (``row_factor``: dim-0,
+    ``col_factor``: dim-1).  With this set, :func:`spec_cost` prices every
+    fused operator as ``min(local arm, distributed arm)`` — the
+    local × distributed template dimension of candidate selection.
+    """
+
+    axes: tuple[str, ...]          # row-shard mesh axes, mesh order
+    n: int                         # total row-shard degree (Π axis sizes)
+    ici_bw: float = _hw.TPU_V5E.ici_bw
+    row_factor: dict = field(default_factory=dict)   # input nid → dim-0 shards
+    col_factor: dict = field(default_factory=dict)   # input nid → dim-1 shards
+    #: per-spec memo of :func:`_dist_arm` (one planning call shares one
+    #: DistParams, so the cache dies with the plan)
+    cache: dict = field(default_factory=dict, repr=False, compare=False)
+
+    def signature(self) -> tuple:
+        """Hashable identity (plan-cache / context keys)."""
+        return (self.axes, self.n, self.ici_bw,
+                tuple(sorted(self.row_factor.items())),
+                tuple(sorted(self.col_factor.items())))
+
+
+@dataclass(frozen=True)
+class Placement:
+    """The local-vs-distributed decision for one fused operator.
+
+    ``arm`` is the selected execution arm; both arms' modeled costs are
+    kept for ``explain()``.  For the distributed arm, ``epilogue`` names
+    the collective that completes the template
+    (:func:`repro.core.templates.dist_epilogue`), ``collective_bytes`` is
+    the total per-device ring volume (epilogue all-reduce + side-input
+    all-gathers), and ``sharded`` lists the bound input nids each device
+    reads as a row shard."""
+
+    arm: str                       # "local" | "distributed"
+    cost: float                    # cost of the selected arm
+    local_cost: float
+    dist_cost: float               # inf when no distributed variant applies
+    epilogue: Optional[str] = None  # none | psum | pmin | pmax
+    axes: tuple = ()
+    n: int = 1
+    collective_bytes: float = 0.0
+    gather_bytes: float = 0.0      # side-input all-gather share of the above
+    sharded: frozenset = frozenset()
+
+
 @dataclass
 class CostParams:
     read_bw: float = _hw.TPU_V5E.hbm_bw      # HBM read, B/s
@@ -45,6 +98,9 @@ class CostParams:
     input_read_bw: dict[int, float] = field(default_factory=dict)
     #: hard constraint checker: (spec) -> bool valid; invalid => inf cost.
     max_fused_inputs: int = 12      # VMEM-budget style constraint
+    #: row-shard geometry enabling the distributed cost arm (None: local
+    #: only — the pre-layout behavior).
+    dist: Optional[DistParams] = None
 
     def in_bw(self, nid: int) -> float:
         return self.input_read_bw.get(nid, self.read_bw)
@@ -91,20 +147,17 @@ class FusedOpSpec:
     cover: dict[int, Optional[MemoEntry]]
     inputs: list[int]                     # distinct, order of discovery
     driver: Optional[int] = None          # sparse-exploitation driver input
+    #: local/distributed decision (set by selection when planning under a
+    #: mesh layout; None ≡ local).
+    placement: Optional["Placement"] = None
 
     @property
     def fused(self) -> bool:
         return self.ttype is not None and len(self.cover) > 1
 
 
-def spec_cost(graph: Graph, spec: FusedOpSpec, params: CostParams) -> float:
-    if len(spec.inputs) > params.max_fused_inputs and spec.fused:
-        return math.inf                    # constraint violation (paper Z)
-    root = graph.by_id[spec.root]
-    sp = 1.0
-    if spec.driver is not None:
-        sp = max(graph.by_id[spec.driver].sparsity, 1e-12)
-
+def _spec_flops(graph: Graph, spec: FusedOpSpec) -> float:
+    """Covered-node FLOPs, sparse-driver scaled (shared by both arms)."""
     flops = 0.0
     for nid in spec.cover:
         n = graph.by_id[nid]
@@ -115,15 +168,176 @@ def spec_cost(graph: Graph, spec: FusedOpSpec, params: CostParams) -> float:
             f *= max(graph.by_id[n.inputs[0].nid].sparsity, 1e-12)
         flops += f
     if spec.driver is not None:
-        flops *= sp
+        flops *= max(graph.by_id[spec.driver].sparsity, 1e-12)
+    return flops
 
+
+def _local_spec_cost(graph: Graph, spec: FusedOpSpec,
+                     params: CostParams) -> float:
+    """The paper's Eq. 4 single-device operator cost (the local arm)."""
+    if len(spec.inputs) > params.max_fused_inputs and spec.fused:
+        return math.inf                    # constraint violation (paper Z)
+    root = graph.by_id[spec.root]
     t_r = 0.0
     for i in spec.inputs:
         n = graph.by_id[i]
         t_r += node_bytes(n, params) / params.in_bw(i)
     t_w = node_bytes(root, params) / params.write_bw
-    t_c = flops / params.compute_bw
+    t_c = _spec_flops(graph, spec) / params.compute_bw
     return t_w + max(t_r, t_c)
+
+
+def spec_cost(graph: Graph, spec: FusedOpSpec, params: CostParams) -> float:
+    """Operator cost under ``params``.
+
+    Without distributed geometry this is the local Eq. 4 cost.  When
+    ``params.dist`` is set (planning under a mesh layout), every fused
+    operator is priced on *both* execution arms and the cheaper one wins —
+    candidate selection thereby enumerates ``local × distributed`` as an
+    extra per-partition template dimension, and the induced plan is hybrid
+    whenever that is what the cost model prefers."""
+    local = _local_spec_cost(graph, spec, params)
+    if params.dist is None or not getattr(spec, "fused", False) \
+            or not math.isfinite(local):
+        return local
+    arm = _dist_arm(graph, spec, params)
+    return local if arm is None else min(local, arm[0])
+
+
+def spec_placement(graph: Graph, spec: FusedOpSpec,
+                   params: CostParams) -> Placement:
+    """Resolve the local/distributed decision for one fused operator (the
+    argmin :func:`spec_cost` takes, with both arms' evidence retained)."""
+    local = _local_spec_cost(graph, spec, params)
+    arm = _dist_arm(graph, spec, params) if math.isfinite(local) else None
+    if arm is None:
+        return Placement("local", local, local, math.inf)
+    cost, epil, coll, gather, sharded, axes, n = arm
+    if cost < local:
+        return Placement("distributed", cost, local, cost, epil, axes, n,
+                         coll, gather, sharded)
+    return Placement("local", local, local, cost, epil, axes, n)
+
+
+def _iter_rows(graph: Graph, spec: FusedOpSpec, variant: str,
+               prog_root: int) -> int:
+    """Rows of the template's iteration domain — the dimension the
+    distributed variant shards.  Aggregating variants (including the
+    closing-matmul ones, whose contraction runs over the chain rows)
+    iterate the chain at ``prog_root``; no_agg/right_mm iterate the
+    output rows."""
+    if variant in ("full_agg", "row_agg", "col_agg", "col_t_agg",
+                   "left_mm"):
+        return graph.by_id[prog_root].shape[0]
+    return graph.by_id[spec.root].shape[0]
+
+
+def _shardable(graph: Graph, spec: FusedOpSpec, i: int, rows: int) -> bool:
+    """May input ``i`` arrive as a row shard of the iteration domain?
+
+    Shape equality with the iteration rows is necessary but *not*
+    sufficient — the template must also bind the input per-row.  A
+    covered matmul consuming ``i`` as its **right** operand contracts
+    (or, transposed, emits) over ``i``'s rows, so the full operand is
+    needed regardless of its shape (a square main would otherwise
+    misclassify, e.g. ``w`` in ``(X @ w)`` with m == n).  A **left**
+    operand is row-bound — except a transposed interior read, which only
+    the reduce epilogue of a closing ``t(X) @ chain`` / ``left_mm`` root
+    makes exact."""
+    node = graph.by_id[i]
+    if node.is_scalar or node.shape[0] != rows:
+        return False
+    for nid in spec.cover:
+        c = graph.by_id[nid]
+        if not c.is_matmul:
+            continue
+        a, b = c.inputs
+        if b.nid == i:
+            return False
+        if a.nid == i and c.ta and nid != spec.root:
+            return False
+    return True
+
+
+_MISS = object()
+
+
+def _dist_arm(graph: Graph, spec: FusedOpSpec, params: CostParams):
+    """Cost the distributed variant of ``spec``, or None when no such
+    variant exists (template/variant not in the registry, rows don't
+    divide the shard group, or no operand actually arrives row-sharded).
+
+    Returns (cost, epilogue, collective_bytes, gather_bytes, sharded
+    nids, axes, n).  Reads and compute scale 1/n over the row shards;
+    broadcast side inputs are read in full, and layout-sharded ones add
+    ring all-gather volume; a "reduce" epilogue adds the ring all-reduce
+    of the (partial) output — all at ICI bandwidth (``repro.hw``).
+
+    Memoized per spec identity on ``params.dist`` (one planning call
+    shares one DistParams): MPSkipEnum re-costs the same induced
+    operators exponentially often, and the variant derivation walks the
+    cover — pure arithmetic must stay pure arithmetic in that loop."""
+    dp = params.dist
+    if dp is None or dp.n <= 1 or spec.ttype is None:
+        return None
+    key = (id(graph), spec.root, spec.ttype, frozenset(spec.cover),
+           tuple(spec.inputs), spec.driver)
+    hit = dp.cache.get(key, _MISS)
+    if hit is not _MISS:
+        return hit
+    dp.cache[key] = out = _dist_arm_uncached(graph, spec, params, dp)
+    return out
+
+
+def _dist_arm_uncached(graph: Graph, spec: FusedOpSpec, params: CostParams,
+                       dp: DistParams):
+    from .templates import dist_epilogue
+    from .cplan import _variant_of     # runtime import: cplan imports us
+
+    root = graph.by_id[spec.root]
+    variant, agg_op, prog_root, _close = _variant_of(
+        graph, spec.ttype, root, set(spec.cover))
+    epil = dist_epilogue(spec.ttype, variant, agg_op)
+    if epil is None:
+        return None
+    rows = _iter_rows(graph, spec, variant, prog_root)
+    n = dp.n
+    if rows < n or rows % n:
+        return None
+
+    sharded: set[int] = set()
+    anchored = False            # ≥1 operand is layout-sharded over rows
+    t_r = 0.0
+    gather = 0.0
+    for i in spec.inputs:
+        node = graph.by_id[i]
+        b = node_bytes(node, params)
+        r = dp.row_factor.get(i, 1)
+        c = dp.col_factor.get(i, 1)
+        if _shardable(graph, spec, i, rows):
+            # row-bound: each device reads only its row slice
+            sharded.add(i)
+            anchored = anchored or r == n
+            t_r += b / n / params.read_bw
+            if c > 1:           # column shards gathered within the row group
+                gather += _hw.all_gather_bytes(b / n, c)
+        else:
+            # broadcast side input: full read, all-gathered if sharded
+            t_r += b / params.read_bw
+            if r * c > 1:
+                gather += _hw.all_gather_bytes(b, r * c)
+    if not anchored:
+        return None
+    t_c = _spec_flops(graph, spec) / n / params.compute_bw
+    out_b = node_bytes(root, params)
+    coll = gather
+    if epil == "none":
+        t_w = out_b / n / params.write_bw      # row-partitioned write
+    else:
+        t_w = out_b / params.write_bw          # replicated reduced output
+        coll += _hw.all_reduce_bytes(out_b, n)
+    cost = t_w + max(t_r, t_c) + coll / dp.ici_bw
+    return cost, epil, coll, gather, frozenset(sharded), dp.axes, n
 
 
 # -- sparse driver detection ---------------------------------------------------

@@ -5,6 +5,15 @@ table with all valid partial fusion plans.  Template-oblivious: all
 template-specific logic lives behind the open/fuse/merge/close predicates in
 :mod:`templates`.  Linear in the number of operators (memoized); per
 operator at most O(2^|inputs| · |T|) entries.
+
+Placement-oblivious too: the same memo entries serve both execution arms
+of the ``local × distributed`` dimension.  A distributed variant of a
+template changes *where* the generated body runs and which collective
+epilogue closes it (:data:`repro.core.templates.DIST_VARIANTS`), not
+which fusion structures are valid — so exploration enumerates structure
+once, and selection (:mod:`repro.core.select` / :func:`repro.core.cost.
+spec_cost`) prices each surviving candidate on both arms when a mesh
+layout is in scope.
 """
 
 from __future__ import annotations

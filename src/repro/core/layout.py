@@ -10,16 +10,27 @@ the tensor-parallel axis, vectors and scalars degrade to replication.
 Two consumers, one entry point (the paper's hybrid local/distributed
 plans):
 
-* **planning** — :func:`layout_cost_params` re-prices reads of
-  column-sharded (model-parallel) side inputs at ICI all-gather bandwidth
-  (``core.cost.CostParams.input_read_bw``, paper §4.4), so candidate
-  selection sees distributed read costs.  This accepts any mesh exposing
-  ``.shape``/``.axis_names`` — including the planner's abstract
-  ``LogicalMesh`` — so plans can be costed for a 256-chip pod from a CPU
-  container.
+* **planning** — :func:`layout_cost_params` turns the layout into cost
+  geometry for candidate selection:
+
+  - reads of column-sharded (model-parallel) side inputs are re-priced at
+    ICI all-gather bandwidth (``core.cost.CostParams.input_read_bw``,
+    paper §4.4) for the *local* arm, and
+  - a :class:`~repro.core.cost.DistParams` is attached describing the
+    row-shard group (the mesh's data/FSDP axes) and the per-input shard
+    factors read off the spec trees, which enables the *distributed* cost
+    arm — selection then enumerates ``local × distributed`` per fused
+    operator and the induced plan is hybrid.
+
+  This accepts any mesh exposing ``.shape``/``.axis_names`` — including
+  the planner's abstract ``LogicalMesh`` — so hybrid plans can be costed
+  for a 256-chip pod from a CPU container.
 * **execution** — :meth:`FusionLayout.apply` places/constrains dense
-  operands with ``NamedSharding`` on a *real* ``jax.sharding.Mesh``; the
-  fused computation then runs SPMD under ``jit``.
+  operands with ``NamedSharding`` on a *real* ``jax.sharding.Mesh``;
+  locally-placed fused operators then run SPMD under ``jit``, while
+  operators the plan placed *distributed* run their generated body inside
+  ``shard_map`` with the template's collective epilogue
+  (:mod:`repro.kernels.distributed`).
 """
 
 from __future__ import annotations
@@ -28,7 +39,7 @@ from dataclasses import dataclass
 from typing import Any, Mapping, Optional
 
 from repro import hw as _hw
-from .cost import CostParams
+from .cost import CostParams, DistParams
 from .ir import Graph
 
 
@@ -36,19 +47,38 @@ def _mesh_sig(mesh) -> tuple:
     return tuple((a, int(mesh.shape[a])) for a in mesh.axis_names)
 
 
+def layout_signature(layout) -> Optional[tuple]:
+    """Hashable identity of a layout-ish object: a :class:`FusionLayout`,
+    a bare mesh (``.shape``/``.axis_names``), or None."""
+    if layout is None:
+        return None
+    if hasattr(layout, "key"):
+        return layout.key()
+    if hasattr(layout, "axis_names"):
+        return _mesh_sig(layout)
+    return ("opaque", id(layout))
+
+
 @dataclass(frozen=True)
 class FusionLayout:
-    """Mesh + per-name PartitionSpecs for a fused region's inputs/outputs."""
+    """Mesh + per-name PartitionSpecs for a fused region's inputs/outputs.
+
+    Built either explicitly (``FusionLayout(mesh, {"X": P("data", None)})``)
+    or via :meth:`auto`, which fits the PR-1/2 sharding rules to the
+    region's operand shapes.  Passing a bare mesh to ``Traced.plan(layout=)``
+    or scoping one through ``FusionContext(layout=mesh)`` auto-fits it the
+    same way."""
 
     mesh: Any
     specs: Any            # Mapping[str, PartitionSpec-like]
 
     @staticmethod
     def auto(mesh, shapes: Mapping[str, tuple[int, int]]) -> "FusionLayout":
-        """Fit the PR-1/2 sharding rules to a dict of 2-D operand shapes."""
+        """Fit the PR-1/2 sharding rules to a dict of 2-D operand shapes:
+        rows over the FSDP axes, columns over the TP axis, each entry
+        divisibility-checked with per-dim degradation to replication."""
         from repro.dist import sharding as sh
-        specs = {name: sh._spec(mesh, shape,
-                                (sh.fsdp_axes(mesh), sh.tp_axis(mesh)))
+        specs = {name: sh.operand_spec(mesh, shape)
                  for name, shape in shapes.items()}
         return FusionLayout(mesh, specs)
 
@@ -59,12 +89,29 @@ class FusionLayout:
     def spec_for(self, name: str):
         return self.specs.get(name)
 
-    def _shards_cols(self, name: str, shape: tuple[int, int]) -> bool:
+    def shard_factors(self, name: str) -> tuple[int, int]:
+        """(row, col) shard degrees of one named operand (1 ≡ replicated)."""
+        from repro.dist import sharding as sh
         spec = self.specs.get(name)
         if spec is None:
-            return False
+            return (1, 1)
         entries = tuple(spec)
-        return len(entries) >= 2 and entries[1] is not None
+        r = sh.axis_size(self.mesh, entries[0]) if len(entries) >= 1 else 1
+        c = sh.axis_size(self.mesh, entries[1]) if len(entries) >= 2 else 1
+        return (r, c)
+
+    def _shards_cols(self, name: str, shape: tuple[int, int]) -> bool:
+        return self.shard_factors(name)[1] > 1
+
+    def row_axes(self) -> tuple[str, ...]:
+        """The row-shard group: every non-tensor-parallel mesh axis."""
+        from repro.dist import sharding as sh
+        return sh.fsdp_axes(self.mesh)
+
+    def row_devices(self) -> int:
+        """Total row-shard degree (Π row-axis sizes; 1 on a 1-D TP mesh)."""
+        from repro.dist import sharding as sh
+        return sh.axis_size(self.mesh, self.row_axes())
 
     def apply(self, name: str, value):
         """Constrain/place one dense operand on its spec (identity when the
@@ -82,27 +129,63 @@ class FusionLayout:
         return jax.device_put(value, sharding)
 
 
+def ensure_layout(layout, graph: Graph,
+                  extra_shapes: Optional[Mapping] = None) -> FusionLayout:
+    """Coerce a layout-ish object into a :class:`FusionLayout` for this
+    graph: bare meshes are auto-fitted to the graph's input and output
+    shapes (``extra_shapes`` may add operand-name → shape entries)."""
+    if isinstance(layout, FusionLayout):
+        return layout
+    shapes = {n.name: n.shape for n in graph.inputs() if n.name}
+    shapes.update({f"__out{i}": o.shape
+                   for i, o in enumerate(graph.outputs)})
+    if extra_shapes:
+        shapes.update(extra_shapes)
+    return FusionLayout.auto(layout, shapes)
+
+
 def layout_cost_params(layout: Optional[FusionLayout], graph: Graph,
                        params: CostParams) -> CostParams:
-    """Cost parameters with distributed read-bandwidth overrides.
+    """Cost parameters carrying the layout's distributed geometry.
 
-    Inputs whose layout shards the column (contraction-side) dimension must
-    be all-gathered across the model axis before a row-local fused operator
-    can consume them — their reads are priced at ICI bandwidth instead of
-    HBM bandwidth (the paper's "different read bandwidths for inputs of
-    resulting distributed operations").
+    Two effects (both no-ops without a layout):
+
+    * inputs whose layout shards the column (contraction-side) dimension
+      must be all-gathered across the model axis before a row-local fused
+      operator can consume them — the local arm prices their reads at ICI
+      bandwidth instead of HBM bandwidth (the paper's "different read
+      bandwidths for inputs of resulting distributed operations");
+    * a :class:`~repro.core.cost.DistParams` describing the row-shard
+      group and per-input shard factors enables the distributed cost arm,
+      so selection can choose mesh-wide execution per fused operator.
     """
     if layout is None:
         return params
+    if not isinstance(layout, FusionLayout):
+        layout = ensure_layout(layout, graph)
     overrides = dict(params.input_read_bw)
+    row_factor: dict[int, int] = {}
+    col_factor: dict[int, int] = {}
     for node in graph.inputs():
-        if node.name and layout._shards_cols(node.name, node.shape):
+        if not node.name:
+            continue
+        r, c = layout.shard_factors(node.name)
+        if r > 1:
+            row_factor[node.nid] = r
+        if c > 1:
+            col_factor[node.nid] = c
             overrides[node.nid] = _hw.TPU_V5E.ici_bw
-    if not overrides:
+    axes = layout.row_axes()
+    n = layout.row_devices()
+    dist = DistParams(axes=tuple(axes), n=n, ici_bw=_hw.TPU_V5E.ici_bw,
+                      row_factor=row_factor, col_factor=col_factor) \
+        if n > 1 else None
+    if not overrides and dist is None:
         return params
     return CostParams(read_bw=params.read_bw, write_bw=params.write_bw,
                       compute_bw=params.compute_bw,
                       dtype_bytes=params.dtype_bytes,
                       sparse_idx_bytes=params.sparse_idx_bytes,
                       input_read_bw=overrides,
-                      max_fused_inputs=params.max_fused_inputs)
+                      max_fused_inputs=params.max_fused_inputs,
+                      dist=dist)

@@ -20,8 +20,10 @@ import math
 from dataclasses import dataclass, field
 from typing import Optional
 
-from .cost import (CostParams, FusedOpSpec, TPU_V5E, partition_cost,
-                   resolve_partition, spec_cost)
+from repro import hw as _hw
+from .cost import (CostParams, FusedOpSpec, Placement, TPU_V5E,
+                   partition_cost, resolve_partition, spec_cost,
+                   spec_placement)
 from .enumerate import EnumStats, mp_skip_enum
 from .explore import ExploreStats, explore
 from .ir import Graph
@@ -38,6 +40,8 @@ class MultiAggSpec:
     roots: list[int]
     parts: list[FusedOpSpec]
     inputs: list[int]
+    #: local/distributed decision (see :class:`repro.core.cost.Placement`)
+    placement: Optional[Placement] = None
 
     root = property(lambda self: self.roots[0])
     ttype = TType.MAGG
@@ -104,6 +108,8 @@ def select(graph: Graph, memo: MemoTable, mode: str = "gen",
 
     specs = _topo_order(graph, specs)
     specs = _combine_multi_aggs(graph, specs, params)
+    if params.dist is not None and params.dist.n > 1:
+        _annotate_placements(graph, specs, params)
     return specs, total_cost
 
 
@@ -136,6 +142,44 @@ def _assignment(graph: Graph, memo: MemoTable, part: Partition, mode: str,
         return {p for p in part.points if p[1] in mat}
     q, _ = mp_skip_enum(graph, memo, part, params, stats=st)
     return {p for p, v in zip(part.points, q) if v}
+
+
+# -- local/distributed placement (hybrid plans) --------------------------------
+
+def _annotate_placements(graph: Graph, specs: list,
+                         params: CostParams) -> None:
+    """Pin the local-vs-distributed decision :func:`spec_cost` already
+    priced onto every fused operator, so codegen executes — and
+    ``explain()`` reports — exactly the costed arm.
+
+    A combined multi-aggregate distributes only when *every* member
+    aggregate does (all sum-reduced partials ride one ``psum`` of the
+    stacked (k, 1) output); a single local member keeps the whole
+    operator local rather than splitting one scan across arms."""
+    for s in specs:
+        if isinstance(s, MultiAggSpec):
+            pls = [spec_placement(graph, p, params) for p in s.parts]
+            if pls and all(p.arm == "distributed" and p.epilogue == "psum"
+                           for p in pls):
+                n = pls[0].n
+                out_b = len(s.roots) * params.dtype_bytes
+                gather = sum(p.gather_bytes for p in pls)
+                coll = gather + _hw.all_reduce_bytes(out_b, n)
+                sharded = frozenset().union(*(p.sharded for p in pls))
+                s.placement = Placement(
+                    "distributed", sum(p.cost for p in pls),
+                    sum(p.local_cost for p in pls),
+                    sum(p.dist_cost for p in pls), "psum",
+                    pls[0].axes, n, coll, gather, sharded)
+            else:
+                # keep the per-part distributed evidence: a finite
+                # dist_cost here means "possible but not chosen", which
+                # is what explain() debugging needs to see
+                local = sum(p.local_cost for p in pls) if pls else 0.0
+                dist = sum(p.dist_cost for p in pls) if pls else math.inf
+                s.placement = Placement("local", local, local, dist)
+        elif getattr(s, "fused", False):
+            s.placement = spec_placement(graph, s, params)
 
 
 # -- helpers -------------------------------------------------------------------

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass
+from typing import Optional
 
 from .ir import (AGG_OPS, CELL_OPS, Graph, Node, sparse_safe_wrt)
 
@@ -304,3 +305,68 @@ TEMPLATES: dict[TType, Template] = {
     TType.MAGG: MAggTpl(),
     TType.OUTER: OuterTpl(),
 }
+
+
+# --------------------------------------------------------------------------
+# distributed template variants (hybrid local/distributed plans)
+# --------------------------------------------------------------------------
+#
+# Every template above also has a *distributed* variant: the generated
+# operator body runs unchanged on a row shard of its iteration domain
+# (``shard_map`` over the mesh's data/FSDP axes), and a per-variant
+# collective epilogue restores the global result.  This table is the
+# registry of which (template, skeleton-variant) pairs distribute and how:
+#
+# * ``"none"``   — the output is row-partitioned exactly like the inputs
+#                  (Cell/Row no_agg, row_agg, Outer right_mm): each shard
+#                  writes its own slice, no communication.
+# * ``"reduce"`` — each shard produces a *partial* of the full output that
+#                  an all-reduce over the row axes completes (full/col
+#                  aggregates, Row col_t_agg, Outer left_mm — everything
+#                  whose reduction axis is the sharded one).  The concrete
+#                  collective is picked per aggregation op by
+#                  :func:`dist_epilogue` (``psum`` / ``pmin`` / ``pmax``);
+#                  ``mean`` partials do not compose associatively per
+#                  shard, so mean-rooted operators stay local.
+#
+# Variant names are the CPlan skeleton variants (``core/cplan.py``); kept
+# as string literals here because cplan imports this module.
+DIST_VARIANTS: dict[tuple[TType, str], str] = {
+    (TType.CELL, "no_agg"):    "none",
+    (TType.CELL, "row_agg"):   "none",
+    (TType.CELL, "col_agg"):   "reduce",
+    (TType.CELL, "full_agg"):  "reduce",
+    (TType.ROW, "no_agg"):     "none",
+    (TType.ROW, "row_agg"):    "none",
+    (TType.ROW, "col_agg"):    "reduce",
+    (TType.ROW, "full_agg"):   "reduce",
+    (TType.ROW, "col_t_agg"):  "reduce",
+    (TType.MAGG, "full_agg"):  "reduce",
+    # Outer distributes only where the reduction axis is the sharded row
+    # axis of the sparse driver: left_mm (t(chain) @ U) and the full/col
+    # aggregates.  right_mm's reduction runs over columns, which stay
+    # local to each row shard — but its *output* is the dense m×n-shaped
+    # product row block, which the template exists to avoid materializing
+    # globally; it distributes as a row-partitioned write.
+    (TType.OUTER, "right_mm"): "none",
+    (TType.OUTER, "left_mm"):  "reduce",
+    (TType.OUTER, "full_agg"): "reduce",
+    (TType.OUTER, "col_agg"):  "reduce",
+}
+
+#: aggregation op → collective completing a "reduce" epilogue.
+_REDUCE_COLLECTIVE = {"sum": "psum", "sum_sq": "psum",
+                      "min": "pmin", "max": "pmax"}
+
+
+def dist_epilogue(ttype: TType, variant: str, agg_op: str) -> Optional[str]:
+    """Collective epilogue of the distributed variant of (template,
+    variant), or None when no distributed variant exists: ``"none"``
+    (row-partitioned output), or the all-reduce flavour (``"psum"`` /
+    ``"pmin"`` / ``"pmax"``) matching the aggregation op."""
+    kind = DIST_VARIANTS.get((ttype, variant))
+    if kind is None:
+        return None
+    if kind == "none":
+        return "none"
+    return _REDUCE_COLLECTIVE.get(agg_op)

@@ -7,6 +7,13 @@ axis-role assignments with the shared roofline cost model (pass
 ``layout="auto"`` to the dry-run, hillclimb, or serve engine);
 ``repro.dist.compat`` backfills ``jax.sharding.AxisType`` on older JAX.
 Importing this package installs the compat shims.
+
+:class:`LogicalMesh` (re-exported from the planner) is the abstract
+``.shape``/``.axis_names`` mesh stand-in every layout consumer accepts —
+including the fusion planner's ``Traced.plan(layout=...)``, which uses it
+to select hybrid local/distributed fused-operator plans from a CPU
+container with no devices attached.
 """
 
 from . import compat  # noqa: F401  (installs AxisType/make_mesh shims)
+from .planner import LogicalMesh  # noqa: F401  (abstract mesh stand-in)

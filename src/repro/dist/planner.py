@@ -80,7 +80,14 @@ ACT_BYTES = 2          # bf16 activations / collective payloads
 
 class LogicalMesh:
     """Abstract mesh (``.shape``/``.axis_names`` only) accepted by the
-    sharding rules — same contract the tests' mesh stand-ins use."""
+    sharding rules — same contract the tests' mesh stand-ins use.
+
+    Also the no-devices entry point to hybrid fused-operator planning:
+    ``Traced.plan(layout=LogicalMesh({"data": 8}))`` costs the
+    local × distributed placement of every fused operator with this
+    module's ring-collective terms (via ``repro.hw``) and reports the
+    decision in ``explain()``; execution stays local until the same plan
+    is made under a real ``jax.sharding.Mesh``."""
 
     def __init__(self, shape: dict[str, int]):
         self.shape = dict(shape)

@@ -134,6 +134,17 @@ def _path_keys(path) -> list:
 # expert parallelism
 # ---------------------------------------------------------------------------
 
+def operand_spec(mesh, shape) -> P:
+    """Layout rule for one fused-operator operand (the fusion planner's
+    ``FusionLayout.auto``): rows over the FSDP axes, columns over the TP
+    axis, with the usual per-dim divisibility degradation — so a (1, n)
+    row vector or a matrix whose rows don't divide the data axes simply
+    replicates.  This is the spec tree the hybrid local/distributed
+    placement (``repro.core.cost.DistParams``) reads its row/column shard
+    factors from."""
+    return _spec(mesh, tuple(shape), (fsdp_axes(mesh), tp_axis(mesh)))
+
+
 def moe_expert_parallel(mesh, cfg) -> bool:
     """True when expert weights shard over the TP axis (EP): the expert
     count must be a positive multiple of the axis size.  olmoe (64e) on a

@@ -3,5 +3,8 @@
 One module per paper template (cellwise/rowwise/multiagg/outerprod), each a
 ``pl.pallas_call`` skeleton with explicit VMEM BlockSpecs; ``ops.py`` is the
 jit'd dispatch wrapper; ``ref.py`` the pure-jnp oracle every kernel is
-validated against.
+validated against; ``distributed.py`` runs generated operator bodies under
+``shard_map`` with per-template collective epilogues (the hybrid
+local/distributed execution arm); ``blocksparse.py`` holds the BCSR and
+CLA-compressed matrix formats.
 """

@@ -10,11 +10,14 @@ units, so the hardware adaptation is:
   row-major, so a Pallas grid over blocks keeps output rows resident in
   VMEM while the MXU computes per-block outer products.  Sparsity
   exploitation (the paper's "sparse drivers") happens at block granularity.
-* :class:`DictCompressed` — CLA-style column compression (per-column
-  dictionary of distinct values + code matrix + counts).  Sparse-safe
-  single-input chains evaluate the generated operator over *distinct
-  values only* and aggregate via counts — a direct port of the paper's
-  compressed-data fast path (§5.2, Fig. 9).
+* :class:`DictCompressed` — **CLA compression**: CLA-style per-column
+  dictionaries of distinct values + code matrix + counts.  Qualifying
+  generated operators (single-main-input full-sum chains; the precise
+  rule lives on ``repro.kernels.ops._execute_dict``) evaluate over
+  *distinct values only* and aggregate via counts — a direct port of the
+  paper's compressed-data fast path (§5.2, Fig. 9); everything else
+  decompresses via :meth:`DictCompressed.todense` and takes the dense
+  paths.
 
 Both are registered JAX pytrees so they flow through jit/vmap/pjit.
 """

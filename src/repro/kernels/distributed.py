@@ -1,0 +1,111 @@
+"""Distributed execution of generated fused operators (``shard_map``).
+
+The distributed variant of a template runs the *same* generated operator
+body as the local one — the CPlan program interpreted at trace time into
+one fused XLA computation (:mod:`repro.kernels.ref`) — but over a row
+shard of its iteration domain, mapped across the mesh's data/FSDP axes
+with ``shard_map``.  What differs per template is only the wiring the
+plan's :class:`~repro.core.cost.Placement` prescribes:
+
+* **in_specs** — operands the placement marked ``sharded`` (row-aligned
+  with the iteration domain) arrive as ``P(axes, None)`` row panels;
+  everything else (side-input row vectors, scalars, the narrow matmul
+  operands of Row/Outer closures) is broadcast replicated — ``shard_map``
+  performs the all-gather the cost model charged for layout-sharded side
+  inputs.
+* **epilogue** — ``"none"`` variants write their own output row panel
+  (``out_specs = P(axes, None)``); ``"psum"``/``"pmin"``/``"pmax"``
+  variants produce per-shard partials completed by the matching
+  ``jax.lax`` collective and replicate the reduced result (multi-
+  aggregates ride one ``psum`` of the stacked (k, 1) output).
+
+Only *real* multi-device meshes execute here; on an abstract
+``LogicalMesh`` (planning from a CPU container) or when an operand is
+block-sparse, the plan's distributed placement is costed and reported but
+the body runs locally — numerically identical by construction, since the
+epilogue collectives are exact.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Callable, Optional
+
+import jax
+
+from repro.core.cplan import CPlan
+from . import ref
+
+#: structural cache of compiled shard_map operators — the distributed
+#: analogue of the plan cache: ``jax.jit`` memoizes per function object,
+#: so rebuilding the closure every CompiledPlan (e.g. ``fuse_exprs`` in a
+#: loop) would retrace+recompile each call.  Keyed by (structural CPlan
+#: hash, mesh, epilogue, axes, per-bind shard mask); bounded LRU.
+_FN_CACHE: "OrderedDict[tuple, Callable]" = OrderedDict()
+_FN_CACHE_MAX = 256
+_FN_LOCK = threading.Lock()
+
+
+def _collective(epilogue: str, axes) -> Optional[Callable]:
+    if epilogue == "psum":
+        return lambda x: jax.lax.psum(x, axes)
+    if epilogue == "pmin":
+        return lambda x: jax.lax.pmin(x, axes)
+    if epilogue == "pmax":
+        return lambda x: jax.lax.pmax(x, axes)
+    return None                                    # "none": sharded write
+
+
+def build_dist_fn(cplan: CPlan, mesh, placement) -> Optional[Callable]:
+    """Compile one distributed fused operator, or None when the runtime
+    cannot realize the placement (abstract mesh, axis mismatch, or a
+    shard that would not divide) — the caller then falls back to the
+    local generated operator.
+
+    The returned callable takes the bound input arrays in ``cplan.binds``
+    order and returns the operator output as a global array (row-sharded
+    for "none" epilogues, replicated for reductions)."""
+    try:
+        from jax.sharding import Mesh, PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+    except ImportError:                            # pragma: no cover
+        return None
+    if not isinstance(mesh, Mesh):
+        return None                                # abstract: cost-only
+    from repro.dist.sharding import axis_size
+    axes = tuple(a for a in placement.axes if a in mesh.axis_names)
+    n = axis_size(mesh, axes)
+    if not axes or n != placement.n:
+        return None
+    for b in cplan.binds:
+        if b.nid in placement.sharded and b.shape[0] % n:
+            return None                            # defensive: plan drift
+
+    # structural hit: a re-traced or structurally-equal plan reuses the
+    # jitted shard_map operator (binding is positional, like GeneratedOp)
+    shard_mask = tuple(b.nid in placement.sharded for b in cplan.binds)
+    key = (cplan.cache_key(), mesh, placement.epilogue, axes, shard_mask)
+    with _FN_LOCK:
+        hit = _FN_CACHE.get(key)
+        if hit is not None:
+            _FN_CACHE.move_to_end(key)
+            return hit
+
+    in_specs = tuple(P(axes, None) if m else P() for m in shard_mask)
+    reduce_fn = _collective(placement.epilogue, axes)
+    out_specs = P() if reduce_fn is not None else P(axes, None)
+    nids = [b.nid for b in cplan.binds]
+
+    def body(*arrs):
+        # the generated operator body, verbatim, on the local row panel
+        out = ref.execute_dense(cplan, dict(zip(nids, arrs)))
+        return reduce_fn(out) if reduce_fn is not None else out
+
+    fn = jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_rep=False))
+    with _FN_LOCK:
+        _FN_CACHE[key] = fn
+        while len(_FN_CACHE) > _FN_CACHE_MAX:
+            _FN_CACHE.popitem(last=False)
+    return fn

@@ -9,8 +9,11 @@ Given a CPlan and bound inputs, pick an execution path:
 * **BCSR** — sparsity-exploiting paths over non-zero blocks only: the Outer
   template (SDDMM-style) and sparse-safe Cell/MAgg chains.  jnp (gather +
   segment-sum) and Pallas (scalar-prefetch grid) variants.
-* **CLA** — DictCompressed single-input chains evaluated over the
-  per-column dictionaries and aggregated via counts (paper Fig. 9).
+* **CLA** — DictCompressed single-input sum-aggregate chains evaluated
+  over the per-column dictionaries and aggregated via counts (paper
+  Fig. 9); the exact qualification rule is documented on
+  :func:`_execute_dict`, the format in :mod:`repro.kernels.blocksparse`
+  ("CLA compression").
 
 Also hosts block-sparse *basic* operators (sparse matmul etc.) used when a
 plan leaves a sparse op unfused.
@@ -222,9 +225,30 @@ def _as_dense(v):
 # --------------------------------------------------------------------------
 
 def _execute_dict(cplan: CPlan, env) -> Optional[jnp.ndarray]:
-    """Full aggregations of single-main-input chains evaluate the program
-    over distinct dictionary values and reduce via counts.  Returns None if
-    the plan does not qualify (caller decompresses)."""
+    """CLA fast path over a :class:`~repro.kernels.blocksparse.
+    DictCompressed` main input: evaluate the program on the per-column
+    dictionary values only, then aggregate via the occurrence counts
+    (``Σ f(distinct) · count`` — paper Fig. 9).
+
+    A plan qualifies only when the whole chain is a function of the
+    compressed matrix and scalars, so per-distinct-value evaluation is
+    exact:
+
+    * exactly one non-scalar bound input (the compressed main — any
+      matrix/vector side input would need per-cell alignment the
+      dictionary has erased),
+    * variant ``full_agg`` with ``agg_op == "sum"`` (count-weighted
+      reduction; min/max/mean don't weight by counts the same way),
+    * not a combined multi-aggregate (``cplan.extra`` empty),
+    * every other bound value is a (1, 1) scalar — a non-scalar side
+      read makes :func:`read` return None and the program evaluation
+      fail, which is caught below.
+
+    Returns the (1, 1) aggregate, or None when the plan does not
+    qualify — :func:`execute` then decompresses the main via
+    ``todense()`` and re-dispatches on the dense paths.  See the "CLA
+    compression" section of :mod:`repro.kernels.blocksparse` for the
+    format itself."""
     mats = [b for b in cplan.binds if b.kind != "scalar"]
     if len(mats) != 1 or cplan.variant != FULL_AGG \
             or cplan.agg_op not in ("sum",) or cplan.extra:

@@ -28,16 +28,23 @@ class TrainConfig:
     moe_aux_weight: float = 0.01
     fusion: str = "off"          # off | gen | fa | fnr  (planner arm)
     unroll_mb: bool = False      # python-loop microbatches (cost probes)
+    #: mesh or FusionLayout for the fused-loss planner: the LSE Row chain
+    #: iterates flattened (B·S) token rows, so under a layout the planner
+    #: may place it distributed (row-partitioned, no collective) while the
+    #: rest of the step stays under GSPMD.  None keeps local planning.
+    fusion_layout: Optional[object] = None
     opt: adamw.OptConfig = adamw.OptConfig()
 
 
-def _fused_lse(logits2d: jnp.ndarray, mode: str) -> jnp.ndarray:
+def _fused_lse(logits2d: jnp.ndarray, mode: str,
+               layout=None) -> jnp.ndarray:
     """log-sum-exp rows through the fusion planner (Row template:
     rowmax → sub → exp → rowsums → log → add), staged explicitly:
-    trace → plan → compile once per (shape, mode), then reuse the
-    Compiled operator.  Differentiable: the training backward pass runs
-    the planned gradient DAG via the operator's custom_vjp."""
+    trace → plan → compile once per (shape, mode, layout), then reuse
+    the Compiled operator.  Differentiable: the training backward pass
+    runs the planned gradient DAG via the operator's custom_vjp."""
     from repro.core import fused, ir
+    from repro.core.layout import layout_signature
 
     if not hasattr(_fused_lse, "_lse"):
         @fused
@@ -46,10 +53,11 @@ def _fused_lse(logits2d: jnp.ndarray, mode: str) -> jnp.ndarray:
             return ir.log(ir.exp(L - m).rowsums()) + m
         _fused_lse._lse = _lse
         _fused_lse._ops = {}
-    key = (tuple(logits2d.shape), mode)
+    key = (tuple(logits2d.shape), mode, layout_signature(layout))
     op = _fused_lse._ops.get(key)
     if op is None:
-        op = _fused_lse._lse.trace(logits2d).plan(mode=mode).compile()
+        op = _fused_lse._lse.trace(logits2d) \
+                            .plan(mode=mode, layout=layout).compile()
         _fused_lse._ops[key] = op
     return op(logits2d)
 
@@ -77,7 +85,7 @@ def _ce(logits, targets, tc: TrainConfig):
         return lm_loss(logits, targets)
     V = logits.shape[-1]
     flat = logits.reshape(-1, V).astype(jnp.float32)
-    lse = _fused_lse(flat, tc.fusion)
+    lse = _fused_lse(flat, tc.fusion, layout=tc.fusion_layout)
     tgt = jnp.take_along_axis(flat, targets.reshape(-1, 1), axis=-1)
     return jnp.mean(lse - tgt)
 

@@ -1,0 +1,38 @@
+"""Docs stay truthful: the CI docs job's checks also run tier-1.
+
+``tools/check_docs.py`` link-checks README.md + docs/ and executes the
+README quickstart snippet verbatim — drift between the documented API
+and the code fails here before it fails in CI.
+"""
+
+import importlib.util
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _load_checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", REPO / "tools" / "check_docs.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_exist():
+    assert (REPO / "README.md").exists()
+    assert (REPO / "docs" / "architecture.md").exists()
+
+
+def test_markdown_links_resolve():
+    errors = _load_checker().check_links()
+    assert not errors, "\n".join(errors)
+
+
+def test_readme_quickstart_runs_verbatim():
+    checker = _load_checker()
+    snippet = checker.quickstart_snippet()
+    assert "trace" in snippet and "plan" in snippet and "compile" in snippet
+    res = checker.run_quickstart()
+    assert res.returncode == 0, res.stdout + res.stderr

@@ -1,0 +1,108 @@
+#!/usr/bin/env python
+"""Docs checks run by the CI docs job (and tier-1 via tests/test_docs.py).
+
+Two checks over ``README.md`` and ``docs/*.md``:
+
+1. **Link check** — every relative markdown link target must exist on
+   disk (external http(s)/mailto links are skipped to keep the job
+   hermetic; pure #anchors are skipped).
+2. **Quickstart drift** — the README code block between
+   ``<!-- ci:quickstart:start -->`` and ``<!-- ci:quickstart:end -->``
+   is extracted verbatim and executed with ``PYTHONPATH=src``; any API
+   drift that breaks the documented snippet fails here.
+
+Usage: ``python tools/check_docs.py`` (from the repo root; exits
+nonzero on failure).
+"""
+
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def doc_files() -> list[Path]:
+    docs = [REPO / "README.md"]
+    docs.extend(sorted((REPO / "docs").glob("*.md")))
+    return [d for d in docs if d.exists()]
+
+
+def check_links() -> list[str]:
+    """Return a list of broken-link descriptions (empty = pass)."""
+    errors = []
+    for doc in doc_files():
+        text = doc.read_text()
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (doc.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{doc.relative_to(REPO)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def quickstart_snippet() -> str:
+    """The verbatim quickstart code block from README.md."""
+    text = (REPO / "README.md").read_text()
+    m = re.search(r"<!-- ci:quickstart:start -->\s*```python\n(.*?)```\s*"
+                  r"<!-- ci:quickstart:end -->", text, re.DOTALL)
+    if m is None:
+        raise AssertionError(
+            "README.md: ci:quickstart markers (or the ```python block "
+            "between them) not found")
+    return m.group(1)
+
+
+def run_quickstart() -> subprocess.CompletedProcess:
+    """Execute the README quickstart snippet in a fresh interpreter."""
+    import os
+    snippet = quickstart_snippet()
+    with tempfile.NamedTemporaryFile("w", suffix="_readme_quickstart.py",
+                                     delete=False) as f:
+        f.write(snippet)
+        path = f.name
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return subprocess.run([sys.executable, path], capture_output=True,
+                          text=True, timeout=600, env=env, cwd=str(REPO))
+
+
+def main() -> int:
+    failures = 0
+    errors = check_links()
+    for e in errors:
+        print(f"LINK FAIL: {e}")
+    if errors:
+        failures += 1
+    print(f"link check: {len(doc_files())} files, "
+          f"{'FAIL' if errors else 'ok'}")
+
+    res = run_quickstart()
+    if res.returncode != 0:
+        print("QUICKSTART FAIL (README drifted from the code):")
+        print(res.stdout)
+        print(res.stderr)
+        failures += 1
+    else:
+        print("quickstart: ok")
+        if res.stdout.strip():
+            print(res.stdout)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
