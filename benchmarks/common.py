@@ -1,11 +1,21 @@
-"""Shared benchmark harness: timing + CSV emission.
+"""Shared benchmark harness: timing + CSV/JSON emission.
 
 Every benchmark prints ``name,us_per_call,derived`` rows (derived = a
-benchmark-specific figure of merit, e.g. speedup over Base).
+benchmark-specific figure of merit, e.g. speedup over Base).  The driver
+(``benchmarks.run --json``) can additionally dump all collected rows as a
+machine-readable JSON artifact (``BENCH_fusion.json``) so the perf
+trajectory is diffable across commits.
+
+Timing rule: :func:`timeit` blocks on *every* value the timed callable
+returns (``jax.block_until_ready`` over the pytree).  JAX dispatch is
+asynchronous — without the block, a "per-call" number for a small
+operator measures Python dispatch only, not the computation.  Any timing
+loop added outside :func:`timeit` must block the same way.
 """
 
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable, Optional
 
@@ -22,7 +32,7 @@ def _block(x):
 
 
 def timeit(fn: Callable, *, warmup: int = 1, reps: int = 3) -> float:
-    """Median wall time per call in microseconds."""
+    """Median wall time per call in microseconds (output-blocked)."""
     for _ in range(warmup):
         _block(fn())
     ts = []
@@ -40,3 +50,20 @@ def emit(name: str, us: float, derived: str = "") -> None:
 
 def header() -> None:
     print("name,us_per_call,derived", flush=True)
+
+
+def write_json(path: str, modules: Optional[list[str]] = None) -> None:
+    """Dump every row emitted so far as a JSON artifact:
+    ``{"rows": [{"name", "us_per_call", "derived"}, ...], ...}``."""
+    doc = {
+        "schema": "repro-bench-v1",
+        "modules": list(modules or []),
+        "backend": jax.default_backend(),
+        "n_devices": len(jax.devices()),
+        "rows": [{"name": n, "us_per_call": round(us, 3), "derived": d}
+                 for (n, us, d) in ROWS],
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {len(ROWS)} rows to {path}", flush=True)

@@ -8,7 +8,7 @@ import numpy as np
 from repro.algos import data, als_cg, autoencoder, glm, kmeans, l2svm, mlogreg
 from repro.core import plan_cache_stats
 from repro.core.codegen import PLAN_CACHE
-from .common import emit
+from .common import _block, emit
 
 
 def main() -> None:
@@ -33,7 +33,9 @@ def main() -> None:
     for name, fn in runs:
         PLAN_CACHE.clear()
         t0 = time.perf_counter()
-        fn()
+        # async dispatch: block on the returned arrays, or the stop clock
+        # reads queue time, not run time
+        _block(fn())
         total_s = time.perf_counter() - t0
         st = plan_cache_stats()
         emit(f"compile_{name}", total_s * 1e6,

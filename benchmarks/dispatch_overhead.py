@@ -1,0 +1,83 @@
+"""Whole-plan vs per-operator dispatch — the staged-execution microbench.
+
+A many-operator chain is executed two ways from the same ExecPlan:
+
+* ``staged=True`` — the whole plan is one jitted computation: a single
+  dispatch per call, every operator boundary an XLA value;
+* ``staged=False`` — the per-operator interpreter: one jitted dispatch
+  per fused operator plus eager basic ops and Python between them (the
+  pre-staging runtime, kept as the debug path).
+
+Each stage is ``sigmoid(cᵀ ⊙ a + b)``: the transpose is never covered by
+a template (a basic operator), so the plan genuinely materializes one
+fused Cell operator plus one basic operator per stage — ``n_operators``
+grows with the chain instead of the whole chain collapsing into a single
+Row operator.  On 96×96 operands the computation is microseconds while
+each dispatch costs tens of microseconds, so the gap is pure plan-level
+overhead — the quantity the whole-plan backend removes.  Expected:
+staged ≥ 2x faster per call on the ≥ 8-operator chain (CPU,
+``pallas="never"``).
+"""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fused, ir
+from .common import _block, emit
+
+M = 64
+
+
+def chain_fn(n_stages: int):
+    @fused
+    def f(X, a, b):
+        c = X
+        for _ in range(n_stages):
+            c = ir.sigmoid(c.T * a + b)    # t: basic op between fused ops
+        return c.sum()
+    return f
+
+
+def _paired(fn_a, fn_b, warmup: int = 3, reps: int = 9):
+    """Interleaved min-of-reps timing (us) for two callables: alternating
+    the arms cancels machine-load drift that would bias whichever arm
+    runs first, and the min is the standard estimator for pure-overhead
+    microbenches (noise is strictly additive)."""
+    for _ in range(warmup):
+        _block(fn_a())
+        _block(fn_b())
+    best_a = best_b = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        _block(fn_a())
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        _block(fn_b())
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a * 1e6, best_b * 1e6
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(M, M)), jnp.float32)
+    a = jnp.asarray(rng.normal(size=(M, M)) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(M, M)) * 0.1, jnp.float32)
+    for n_stages in (8, 16, 32):
+        f = chain_fn(n_stages)
+        planned = f.trace(X, a, b).plan(mode="gen")
+        n_ops = len(planned.eplan.specs)
+        whole = planned.compile(staged=True)
+        per_op = planned.compile(staged=False)
+        t_whole, t_per_op = _paired(lambda: whole(X, a, b),
+                                    lambda: per_op(X, a, b))
+        emit(f"dispatch_chain{n_stages}_per_op", t_per_op,
+             f"n_operators={n_ops}")
+        emit(f"dispatch_chain{n_stages}_whole_plan", t_whole,
+             f"n_operators={n_ops},"
+             f"speedup_vs_per_op={t_per_op / t_whole:.2f}")
+
+
+if __name__ == "__main__":
+    main()

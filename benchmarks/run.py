@@ -1,7 +1,13 @@
 """Benchmark driver — one module per paper table/figure.
 
-Usage: ``PYTHONPATH=src python -m benchmarks.run [module ...]``
-Prints ``name,us_per_call,derived`` CSV rows.
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.run [--json PATH] [module ...]
+
+Prints ``name,us_per_call,derived`` CSV rows; ``--json PATH`` additionally
+writes every collected row as a machine-readable artifact (the CI uploads
+``BENCH_fusion.json`` from the full job so the perf trajectory is
+diffable across commits).
 """
 
 from __future__ import annotations
@@ -9,7 +15,7 @@ from __future__ import annotations
 import sys
 import time
 
-from .common import header
+from .common import header, write_json
 
 MODULES = [
     "micro_cell",        # Fig. 8(a,b)
@@ -18,6 +24,7 @@ MODULES = [
     "micro_outer",       # Fig. 8(h)
     "micro_compressed",  # Fig. 9
     "footprint",         # Fig. 10 (adapted)
+    "dispatch_overhead",  # whole-plan vs per-operator dispatch
     "compile_overhead",  # Table 3 / Fig. 11
     "plan_enum",         # Fig. 12
     "e2e_algos",         # Tables 4/5
@@ -27,7 +34,16 @@ MODULES = [
 
 def main() -> None:
     import importlib
-    want = sys.argv[1:] or MODULES
+    argv = sys.argv[1:]
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
+            sys.exit("usage: python -m benchmarks.run [--json PATH] "
+                     "[module ...]")
+        json_path = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+    want = argv or MODULES
     header()
     for name in want:
         t0 = time.perf_counter()
@@ -40,6 +56,8 @@ def main() -> None:
         mod.main()
         print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
               flush=True)
+    if json_path is not None:
+        write_json(json_path, modules=want)
 
 
 if __name__ == "__main__":

@@ -30,8 +30,9 @@ def _recon_loss(Xb, W1, b1, W2, b2, W3, b3, W4, b4):
 
 def run(X, h1: int = 64, h2: int = 2, batch: int = 128, epochs: int = 1,
         lr: float = 0.1, mu: float = 0.9, mode: str = "gen",
-        pallas: str = "never", seed: int = 0):
-    """Returns (params, loss per step)."""
+        pallas: str = "never", seed: int = 0, staged: bool = True):
+    """Returns (params, loss per step).  ``staged=False`` drops the fused
+    forward/backward to per-operator dispatch (debug path)."""
     if mode == "hand":
         return _run_hand(X, h1, h2, batch, epochs, lr, mu, seed)
     m, n = X.shape
@@ -46,7 +47,7 @@ def run(X, h1: int = 64, h2: int = 2, batch: int = 128, epochs: int = 1,
     vel = [jnp.zeros_like(w) for w in Ws]
     losses = []
     steps = max(1, (m // batch) * epochs)
-    with FusionContext(mode=mode, pallas=pallas):
+    with FusionContext(mode=mode, pallas=pallas, staged=staged):
         def loss_fn(Xb, Ws_, bs_):
             return _recon_loss(Xb, Ws_[0], bs_[0], Ws_[1], bs_[1],
                                Ws_[2], bs_[2], Ws_[3], bs_[3])[0, 0] / batch

@@ -52,20 +52,23 @@ def _objective(out, w):
 
 
 def run(X, y, lam: float = 1e-3, max_iter: int = 20, eps: float = 1e-12,
-        mode: str = "gen", pallas: str = "never", layout=None):
+        mode: str = "gen", pallas: str = "never", layout=None,
+        staged: bool = True):
     """Returns (w, objective per iteration).
 
     ``layout`` (a mesh or ``FusionLayout``) scopes every fused region
     through hybrid local/distributed planning: row-parallel operators over
     X run mesh-wide (psum/row-partitioned epilogues), the small w-space
-    aggregates stay local."""
+    aggregates stay local.  ``staged=False`` drops to per-operator
+    dispatch (debug path; default is one jitted computation per plan)."""
     if mode == "hand":
         return _run_hand(X, y, lam, max_iter, eps)
     m, n = X.shape
     w = jnp.zeros((n, 1), jnp.float32)
     lam_s = jnp.full((1, 1), lam, jnp.float32)
     objs = []
-    with FusionContext(mode=mode, pallas=pallas, layout=layout):
+    with FusionContext(mode=mode, pallas=pallas, layout=layout,
+                       staged=staged):
         obj_grad = jax.value_and_grad(
             lambda w_: _objective_full(X, w_, y, lam_s)[0, 0])
         _, g = obj_grad(w)

@@ -79,11 +79,12 @@ def _nll_terms(P, Y):
 
 def run(X, Y, lam: float = 1e-3, max_outer: int = 10, max_inner: int = 20,
         eps: float = 1e-12, mode: str = "gen", pallas: str = "never",
-        layout=None):
+        layout=None, staged: bool = True):
     """Returns (B, regularized objective per outer iteration).
 
     ``layout`` (a mesh or ``FusionLayout``) plans every fused region
-    hybrid local/distributed — see :func:`_nll_obj_reg`."""
+    hybrid local/distributed — see :func:`_nll_obj_reg`.
+    ``staged=False`` drops to per-operator dispatch (debug path)."""
     if mode == "hand":
         return _run_hand(X, Y, lam, max_outer, max_inner, eps)
     m, n = X.shape
@@ -91,7 +92,8 @@ def run(X, Y, lam: float = 1e-3, max_outer: int = 10, max_inner: int = 20,
     B = jnp.zeros((n, k), jnp.float32)
     lam_s = jnp.full((1, 1), lam, jnp.float32)
     nlls = []
-    with FusionContext(mode=mode, pallas=pallas, layout=layout):
+    with FusionContext(mode=mode, pallas=pallas, layout=layout,
+                       staged=staged):
         obj_grad = jax.value_and_grad(
             lambda B_: _nll_obj_reg(X, B_, Y, lam_s)[0, 0])
         for _ in range(max_outer):

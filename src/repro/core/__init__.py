@@ -16,7 +16,7 @@ it is an explicit, reviewed act.
 from . import ir
 from .api import (Compiled, Fused, FusionInputError, Planned, Traced,
                   fuse_exprs, fused)
-from .codegen import plan_cache_stats
+from .codegen import plan_cache_stats, whole_plan_cache_stats
 from .context import (FusionContext, current_config, current_context,
                       fusion_mode)
 from .cost import CostParams, TPU_V5E
@@ -36,5 +36,6 @@ __all__ = [
     # cost model
     "CostParams", "TPU_V5E",
     # introspection + errors
-    "plan_cache_stats", "NonDifferentiableError", "FusionInputError",
+    "plan_cache_stats", "whole_plan_cache_stats",
+    "NonDifferentiableError", "FusionInputError",
 ]

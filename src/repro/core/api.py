@@ -50,7 +50,8 @@ import jax.numpy as jnp
 
 from repro.kernels.blocksparse import BCSR, DictCompressed
 from . import ir
-from .codegen import CompiledPlan, PLAN_CACHE, compile_plan
+from .codegen import (CompiledPlan, PLAN_CACHE, compile_plan,
+                      freed_intermediates)
 from .context import (FusionContext, current_config, current_context,
                       fusion_mode)
 from .cost import CostParams, TPU_V5E
@@ -303,12 +304,19 @@ class Planned:
         sparsity per operand), ``winner`` (cost, operator count, and one
         signature per fused operator — see :meth:`fused_signatures`),
         ``candidates`` (every selection arm costed on this trace),
-        ``stats`` (exploration/enumeration counters), and ``layout``
+        ``stats`` (exploration/enumeration counters), ``execution``
+        (staged whole-plan compilation: the per-call dispatch count, the
+        dead intermediates the staged trace frees for buffer reuse, and
+        the guarantee that inputs are never donated), and ``layout``
         (mesh + PartitionSpecs, or None).  Under a mesh layout a
         ``distributed`` summary is added: row-shard axes and degree, the
-        local/distributed operator split, and total modeled collective
-        volume.  ``include_backward=True`` appends the planned gradient
-        DAG's report (see :meth:`backward`)."""
+        local/distributed operator split, total modeled collective
+        volume, and the plan ``segments`` — runs of adjacent distributed
+        operators that execute inside a single ``shard_map`` region,
+        each with the intra-segment boundary volume the fused region
+        removes (``removed_collective_bytes``).
+        ``include_backward=True`` appends the planned gradient DAG's
+        report (see :meth:`backward`)."""
         ex, en = self.eplan.explore_stats, self.eplan.enum_stats
         report = {
             "expression": self.traced.name,
@@ -330,6 +338,13 @@ class Planned:
                 "enum_points": en.points_total if en else 0,
                 "plans_costed": en.plans_costed if en else 0,
             },
+            "execution": {
+                "staged": self.context.staged,
+                "dispatches_per_call": 1 if self.context.staged
+                else len(self.eplan.specs),
+                "donated_inputs": [],       # inputs are never donated
+                "freed_intermediates": freed_intermediates(self.eplan),
+            },
             "layout": None,
         }
         if self.context.layout is not None:
@@ -344,6 +359,15 @@ class Planned:
             ops = report["winner"]["operators"]
             n_dist = sum(1 for o in ops
                          if o.get("placement") == "distributed")
+            segments = [{
+                "specs": list(seg.indices),
+                "n_operators": len(seg.indices),
+                "row_axes": list(seg.axes),
+                "devices": seg.n,
+                "n_sharded_edges": len(seg.sharded_edges),
+                "removed_collective_bytes":
+                    int(round(seg.removed_gather_bytes)),
+            } for seg in self.eplan.segments]
             report["distributed"] = {
                 "row_axes": list(lay.row_axes()),
                 "devices": lay.row_devices(),
@@ -351,6 +375,9 @@ class Planned:
                 "n_fused_distributed": n_dist,
                 "collective_bytes": sum(o.get("collective_bytes", 0)
                                         for o in ops),
+                "segments": segments,
+                "removed_collective_bytes": sum(
+                    s["removed_collective_bytes"] for s in segments),
             }
         if include_backward:
             bwd = self.backward()
@@ -361,21 +388,31 @@ class Planned:
             }
         return report
 
-    def compile(self, pallas: Optional[str] = None) -> "Compiled":
+    def compile(self, pallas: Optional[str] = None,
+                staged: Optional[bool] = None) -> "Compiled":
         """Stage 3: bind the plan to generated operators.
 
         ``pallas`` overrides the context's kernel-lowering policy:
         ``"never"`` (XLA-fused trace, the default), ``"interpret"``
         (Pallas template kernels in interpreter mode — CPU-safe
-        validation), or ``"tpu"``.  Generated operators come from the
-        global structural plan cache (:func:`plan_cache_stats`), so
-        structurally-equal plans — retraced shapes, other expressions
-        with the same skeleton — reuse compiled operators.  The returned
-        :class:`Compiled` is callable on arrays and differentiable
-        (``jax.custom_vjp`` whose backward is the *planned* gradient
-        DAG)."""
-        ctx = self.context if pallas is None \
-            else self.context.with_(pallas=pallas)
+        validation), or ``"tpu"``.  With ``staged=True`` (default) the
+        *whole plan* is compiled into a single jitted computation — one
+        dispatch per call, literals folded as constants, dead
+        intermediates freed for buffer reuse, distributed segments
+        lowered into single ``shard_map`` regions — memoized in the
+        structural whole-plan cache (:func:`whole_plan_cache_stats`);
+        ``staged=False`` keeps per-operator dispatch as a debug path.
+        Generated operators come from the global structural plan cache
+        (:func:`plan_cache_stats`), so structurally-equal plans —
+        retraced shapes, other expressions with the same skeleton —
+        reuse compiled operators.  The returned :class:`Compiled` is
+        callable on arrays and differentiable (``jax.custom_vjp`` whose
+        backward is the *planned* gradient DAG)."""
+        ctx = self.context
+        if pallas is not None:
+            ctx = ctx.with_(pallas=pallas)
+        if staged is not None:
+            ctx = ctx.with_(staged=staged)
         return Compiled(replace(self, context=ctx))
 
 
@@ -391,9 +428,11 @@ class Compiled:
     def __init__(self, planned: Planned):
         self.planned = planned
         ctx = planned.context
+        self.staged = ctx.staged
         self._cplan: CompiledPlan = compile_plan(planned.eplan,
                                                  pallas=ctx.pallas,
-                                                 layout=ctx.layout)
+                                                 layout=ctx.layout,
+                                                 staged=ctx.staged)
         self._n_outs = len(planned.eplan.graph.outputs)
         self._vjp_fn = None
         self._bwd_compiled: Optional[CompiledPlan] = None
@@ -417,7 +456,7 @@ class Compiled:
         if self._bwd_compiled is None:
             self._bwd_compiled = compile_plan(
                 bwd.eplan, pallas=self.planned.context.pallas,
-                layout=self.planned.context.layout)
+                layout=self.planned.context.layout, staged=self.staged)
         ct_names = [n for n in bwd.traced.in_names if n.startswith("__ct")]
         return self._bwd_compiled, bwd.grad_names, ct_names  # type: ignore
 
@@ -588,8 +627,8 @@ def fuse_exprs(outputs, bindings: dict[str, object],
     eplan = plan_graph(graph, ctx.mode, eff)
     if ctx.layout is not None:
         bindings = {n: ctx.layout.apply(n, v) for n, v in bindings.items()}
-    outs = compile_plan(eplan, pallas=ctx.pallas,
-                        layout=ctx.layout)(bindings)
+    outs = compile_plan(eplan, pallas=ctx.pallas, layout=ctx.layout,
+                        staged=ctx.staged)(bindings)
     if ctx.layout is not None:
         if isinstance(outs, tuple):
             outs = tuple(ctx.layout.apply(f"__out{i}", o)

@@ -1,9 +1,24 @@
 """Code generation & runtime integration (paper §2.1-2.2).
 
 Turns selected plans into executable operators and whole ExecPlans into
-callables.  The **plan cache** memoizes generated operators by structural
-CPlan hash (shapes/ops/binding/variant) so dynamic recompilation and
-repeated tracing reuse compiled operators — the paper's Fig. 11 mechanism.
+callables.  Two cache layers memoize the generated code:
+
+* the **plan cache** memoizes generated *operators* by structural CPlan
+  hash (shapes/ops/binding/variant) so dynamic recompilation and repeated
+  tracing reuse compiled operators — the paper's Fig. 11 mechanism;
+* the **whole-plan cache** memoizes the *staged plan function* — the
+  entire ExecPlan (fused operators, basic ops, literals, multi-aggregate
+  unpacking, distributed segments) traced into one function and jitted
+  once — by structural plan signature, so structurally-equal plans share
+  one XLA executable.
+
+Staged execution is the default: one dispatch per plan call, literals
+folded as trace constants, dead intermediates released via ``_last_uses``
+(XLA then reuses their buffers — plan-level buffer donation), and runs of
+adjacent distributed operators lowered into a single ``shard_map`` region
+(:mod:`repro.kernels.distributed`).  ``compile_plan(staged=False)`` keeps
+the per-operator interpreter dispatch as a debug/fallback path; sparse
+operands and ``pallas="interpret"`` fall back automatically.
 
 Execution paths per operator are chosen by the dispatcher in
 ``kernels/ops.py`` (dense XLA, dense Pallas, BCSR sparsity-exploiting,
@@ -111,6 +126,75 @@ def plan_cache_stats() -> PlanCacheStats:
 
 
 # --------------------------------------------------------------------------
+# whole-plan cache (staged plan functions, layered on the plan cache)
+# --------------------------------------------------------------------------
+
+@dataclass
+class WholePlanCacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    size: int = 0
+    build_time_s: float = 0.0
+
+    @property
+    def total(self) -> int:
+        return self.hits + self.misses
+
+
+class WholePlanCache:
+    """Thread-safe LRU of jitted whole-plan functions keyed by structural
+    plan signature (per-operator CPlan hashes + env wiring + literals +
+    segment/placement structure + pallas policy + mesh).  A hit returns
+    the *same* jitted function object, so XLA's executable cache is shared
+    across structurally-equal CompiledPlans (``fuse_exprs`` in a loop,
+    re-traced shapes, the backward of an identical forward)."""
+
+    def __init__(self, maxsize: int = 256) -> None:
+        self.maxsize = int(maxsize)
+        self._fns: "OrderedDict[tuple, Callable]" = OrderedDict()
+        self._lock = threading.RLock()
+        self.stats = WholePlanCacheStats()
+
+    def get(self, key: tuple) -> Optional[Callable]:
+        with self._lock:
+            fn = self._fns.get(key)
+            if fn is not None:
+                self._fns.move_to_end(key)
+                self.stats.hits += 1
+            return fn
+
+    def put(self, key: tuple, fn: Callable, build_s: float) -> None:
+        with self._lock:
+            self._fns[key] = fn
+            while len(self._fns) > self.maxsize:
+                self._fns.popitem(last=False)
+                self.stats.evictions += 1
+            self.stats.misses += 1
+            self.stats.size = len(self._fns)
+            self.stats.build_time_s += build_s
+
+    def clear(self) -> None:
+        with self._lock:
+            self._fns.clear()
+            self.stats = WholePlanCacheStats()
+
+
+WHOLE_PLAN_CACHE = WholePlanCache()
+
+
+def whole_plan_cache_stats() -> WholePlanCacheStats:
+    """Snapshot of the whole-plan cache counters (public API): ``hits``
+    (a structurally-equal ExecPlan reused an existing staged function —
+    and with it the XLA executable), ``misses`` (staged functions built),
+    ``size``, ``evictions``, and ``build_time_s`` (cumulative staged-
+    lowering time on misses)."""
+    with WHOLE_PLAN_CACHE._lock:
+        return replace(WHOLE_PLAN_CACHE.stats,
+                       size=len(WHOLE_PLAN_CACHE._fns))
+
+
+# --------------------------------------------------------------------------
 # generated operators
 # --------------------------------------------------------------------------
 
@@ -172,16 +256,39 @@ def _eval_basic(graph: Graph, node: Node, env: dict[int, object]):
 # executable plans
 # --------------------------------------------------------------------------
 
+def _spec_roots(spec) -> tuple[int, ...]:
+    return tuple(spec.roots) if isinstance(spec, MultiAggSpec) \
+        else (spec.root,)
+
+
 @dataclass
 class CompiledPlan:
-    """Executable form of an ExecPlan: run specs in dependency order,
-    freeing intermediates when their last consumer has run (the paper's
-    'fewer materialized intermediates' at the plan level).
+    """Executable form of an ExecPlan.
+
+    **Staged path (default).**  The entire plan — fused operators, basic
+    ops, literals, multi-aggregate unpacking, and distributed segments —
+    is traced into *one* function and jitted once, so a plan call is a
+    single XLA dispatch: operator boundaries are XLA values instead of
+    Python round-trips, literals are trace constants, and dead
+    intermediates are released at their last use (``_last_uses``) so XLA
+    reuses their buffers — the paper's 'fewer materialized intermediates'
+    lifted from the operator level to the plan level.  Inputs are never
+    donated: re-calling with the same arrays is always valid.  Staged
+    functions are shared across structurally-equal plans via the
+    :class:`WholePlanCache`.
+
+    **Per-operator fallback** (``staged=False``, sparse operands, or
+    ``pallas="interpret"``): run specs in dependency order, one dispatch
+    per fused operator, freeing intermediates when their last consumer
+    has run — the pre-staging interpreter, kept as the debug path.
 
     When the plan was selected under a mesh layout, fused operators whose
     placement is ``"distributed"`` execute their generated body inside
     ``shard_map`` over the layout's real mesh with the template's
-    collective epilogue (:mod:`repro.kernels.distributed`); everything
+    collective epilogue (:mod:`repro.kernels.distributed`); the staged
+    path lowers each plan :class:`~repro.core.select.Segment` — a run of
+    adjacent distributed operators — into a *single* ``shard_map`` region
+    whose row-sharded intermediates flow shard-to-shard.  Everything
     else — and every operator when the mesh is abstract or an operand is
     sparse — runs the local generated operator.  One plan, hybrid
     execution."""
@@ -190,8 +297,198 @@ class CompiledPlan:
     cache: PlanCache = field(default_factory=lambda: PLAN_CACHE)
     #: FusionLayout the plan was selected under (None: local-only)
     layout: Optional[object] = None
-    #: per-spec-index compiled shard_map callables (False: not realizable)
+    #: whole-plan staged execution (False: per-operator debug dispatch)
+    staged: bool = True
+    #: per-(spec index, mesh) compiled shard_map callables for the per-op
+    #: path (False: not realizable) — keyed by the mesh so a plan
+    #: re-targeted at a different real mesh can't reuse a stale executable
     _dist_fns: dict = field(default_factory=dict, repr=False)
+    #: literal (1, 1) arrays, built once per plan (per-op path)
+    _lit_cache: Optional[dict] = field(default=None, repr=False)
+    #: jitted whole-plan function + its un-jitted trace (introspection)
+    _staged_fn: Optional[Callable] = field(default=None, repr=False)
+    _staged_raw: Optional[Callable] = field(default=None, repr=False)
+
+    # -- staged whole-plan path --------------------------------------------
+
+    def staged_callable(self) -> tuple[Callable, Callable]:
+        """(jitted whole-plan function, its un-jitted trace function),
+        building them on first use.  Both take the graph's input arrays
+        positionally (``graph.inputs()`` order) and return the tuple of
+        graph outputs; the raw function is exposed so tests can inspect
+        the plan's jaxpr (e.g. count ``shard_map`` regions)."""
+        if self._staged_fn is None:
+            self._staged_fn, self._staged_raw = self._build_staged()
+        return self._staged_fn, self._staged_raw
+
+    def _build_staged(self) -> tuple[Callable, Callable]:
+        import jax
+        from repro.kernels.distributed import SegmentItem, build_segment_fn
+
+        t0 = time.perf_counter()
+        graph, plan = self.plan.graph, self.plan
+        specs = plan.specs
+        in_nids = tuple(n.nid for n in graph.inputs())
+        lits = tuple((n.nid, float(n.attrs["value"]))
+                     for n in graph.nodes if n.op == "lit")
+        output_ids = tuple(o.nid for o in graph.outputs)
+        mesh = getattr(self.layout, "mesh", None)
+
+        # consumers per node (for segment exports)
+        cons: dict[int, set[int]] = {}
+        for j, s in enumerate(specs):
+            for i in s.inputs:
+                cons.setdefault(i, set()).add(j)
+
+        # canonical env tokens: whole-plan keys must capture the wiring,
+        # not the node ids (structurally-equal plans from other traces
+        # must hit)
+        canon: dict[int, tuple] = {nid: ("in", p)
+                                   for p, nid in enumerate(in_nids)}
+        for nid, v in lits:
+            canon[nid] = ("lit", v)
+
+        steps: list[tuple] = []          # executable steps
+        key_parts: list[tuple] = []      # structural key, one per step
+        spec_step: dict[int, int] = {}   # spec idx -> step idx
+
+        def _token(roots: tuple[int, ...], step_idx: int,
+                   item_idx: int = 0) -> None:
+            # the item index distinguishes the members of one segment
+            # step — without it two outputs of the same step would be
+            # indistinguishable in the whole-plan key and a structurally
+            # different consumer wiring could hit the wrong function
+            for k, r in enumerate(roots):
+                canon[r] = ("s", step_idx, item_idx, k)
+
+        seg_start = {seg.indices[0]: seg for seg in plan.segments}
+        idx = 0
+        while idx < len(specs):
+            seg = seg_start.get(idx)
+            if seg is not None and mesh is not None:
+                seg_set = set(seg.indices)
+                items = []
+                for j in seg.indices:
+                    spec = specs[j]
+                    _op, cplan = self.cache.get_or_build(graph, spec)
+                    roots = _spec_roots(spec)
+                    export = any(r in output_ids
+                                 or (cons.get(r, set()) - seg_set)
+                                 for r in roots)
+                    items.append(SegmentItem(cplan, spec.placement,
+                                             roots, export))
+                built = build_segment_fn(items, mesh)
+                if built is not None:
+                    fn, ext, _epil = built
+                    step_idx = len(steps)
+                    steps.append(("seg", fn, ext,
+                                  tuple(it.roots for it in items
+                                        if it.export)))
+                    key_parts.append((
+                        "seg", mesh,
+                        tuple((it.cplan.cache_key(), it.placement.epilogue,
+                               tuple(b.nid in it.placement.sharded
+                                     for b in it.cplan.binds), it.export)
+                              for it in items),
+                        tuple(canon[nid] for nid in ext)))
+                    for j in seg.indices:
+                        spec_step[j] = step_idx
+                    for item_idx, it in enumerate(items):
+                        _token(it.roots, step_idx, item_idx)
+                    idx = seg.indices[-1] + 1
+                    continue
+            spec = specs[idx]
+            step_idx = len(steps)
+            if isinstance(spec, MultiAggSpec) or (
+                    isinstance(spec, FusedOpSpec) and spec.fused):
+                _op, cplan = self.cache.get_or_build(graph, spec)
+                roots = _spec_roots(spec)
+                pl = getattr(spec, "placement", None)
+                built = None
+                if pl is not None and pl.arm == "distributed" \
+                        and mesh is not None:
+                    built = build_segment_fn(
+                        [SegmentItem(cplan, pl, roots, True)], mesh)
+                bind_nids = tuple(b.nid for b in cplan.binds)
+                if built is not None:
+                    fn, ext, _epil = built
+                    steps.append(("seg", fn, ext, (roots,)))
+                    key_parts.append((
+                        "seg", mesh,
+                        ((cplan.cache_key(), pl.epilogue,
+                          tuple(b.nid in pl.sharded for b in cplan.binds),
+                          True),),
+                        tuple(canon[nid] for nid in ext)))
+                else:
+                    steps.append(("fused", cplan, bind_nids, roots))
+                    key_parts.append((
+                        "fused", cplan.cache_key(),
+                        tuple(canon[nid] for nid in bind_nids)))
+                _token(roots, step_idx)
+            else:
+                node = graph.by_id[spec.root]
+                steps.append(("basic", node))
+                key_parts.append((
+                    "basic", node.op,
+                    tuple(sorted(node.attrs.items())), node.shape,
+                    tuple(canon[i.nid] if i.op != "lit"
+                          else ("lit", float(i.attrs["value"]))
+                          for i in node.inputs)))
+                canon[spec.root] = ("s", step_idx, 0, 0)
+            spec_step[idx] = step_idx
+            idx += 1
+
+        # dead intermediates, re-indexed from spec positions to steps
+        free: dict[int, list[int]] = {}
+        for sidx, dead in _last_uses(plan).items():
+            step_idx = spec_step[sidx]
+            keep = set(output_ids)
+            free.setdefault(step_idx, []).extend(
+                d for d in dead if d not in keep)
+
+        pallas = self.pallas
+
+        def plan_fn(*arrays):
+            env: dict[int, object] = dict(zip(in_nids, arrays))
+            for nid, v in lits:         # trace-time constants
+                env[nid] = jnp.full((1, 1), v, jnp.float32)
+            for step_idx, step in enumerate(steps):
+                kind = step[0]
+                if kind == "seg":
+                    _, fn, ext, out_roots = step
+                    outs = fn(*[env[nid] for nid in ext])
+                    for out, roots in zip(outs, out_roots):
+                        if len(roots) > 1:
+                            for k, r in enumerate(roots):
+                                env[r] = out[k].reshape(1, 1)
+                        else:
+                            env[roots[0]] = out
+                elif kind == "fused":
+                    _, cplan, bind_nids, roots = step
+                    out = kops.execute(
+                        cplan, {nid: env[nid] for nid in bind_nids},
+                        pallas=pallas)
+                    if len(roots) > 1:
+                        for k, r in enumerate(roots):
+                            env[r] = out[k].reshape(1, 1)
+                    else:
+                        env[roots[0]] = out
+                else:
+                    node = step[1]
+                    env[node.nid] = _eval_basic(graph, node, env)
+                for dead in free.get(step_idx, ()):
+                    env.pop(dead, None)      # release: XLA reuses buffers
+            return tuple(env[o] for o in output_ids)
+
+        key = (tuple(key_parts), tuple(canon[o] for o in output_ids),
+               self.pallas)
+        jitted = WHOLE_PLAN_CACHE.get(key)
+        if jitted is None:
+            jitted = jax.jit(plan_fn)
+            WHOLE_PLAN_CACHE.put(key, jitted, time.perf_counter() - t0)
+        return jitted, plan_fn
+
+    # -- per-operator fallback path ----------------------------------------
 
     def _dist_call(self, idx: int, spec, cplan, env: dict[int, object]):
         """Run one distributed-placed operator, or None to fall back."""
@@ -201,26 +498,35 @@ class CompiledPlan:
         vals = [env[b.nid] for b in cplan.binds]
         if any(hasattr(v, "todense") for v in vals):
             return None                    # sparse operand: local fallback
-        fn = self._dist_fns.get(idx)
+        mesh = getattr(self.layout, "mesh", None)
+        try:
+            hash(mesh)
+            key = (idx, mesh)
+        except TypeError:                  # unhashable mesh stand-in
+            key = (idx, id(mesh))
+        fn = self._dist_fns.get(key)
         if fn is None:
             from repro.kernels.distributed import build_dist_fn
-            fn = build_dist_fn(cplan, getattr(self.layout, "mesh", None), pl)
-            self._dist_fns[idx] = fn if fn is not None else False
+            fn = build_dist_fn(cplan, mesh, pl)
+            self._dist_fns[key] = fn if fn is not None else False
         if not fn:
             return None
         return fn(*vals)
 
-    def __call__(self, bindings: dict[str, object]):
+    def _literals(self, graph: Graph) -> dict[int, object]:
+        if self._lit_cache is None:
+            self._lit_cache = {
+                node.nid: jnp.full((1, 1), float(node.attrs["value"]),
+                                   jnp.float32)
+                for node in graph.nodes if node.op == "lit"}
+        return self._lit_cache
+
+    def _call_per_op(self, bindings: dict[str, object]):
         graph = self.plan.graph
         env: dict[int, object] = {}
         for node in graph.inputs():
-            if node.name not in bindings:
-                raise KeyError(f"missing binding for input '{node.name}'")
             env[node.nid] = bindings[node.name]
-        for node in graph.nodes:     # literals
-            if node.op == "lit":
-                env[node.nid] = jnp.full((1, 1), float(node.attrs["value"]),
-                                         jnp.float32)
+        env.update(self._literals(graph))
 
         last_use = _last_uses(self.plan)
         for idx, spec in enumerate(self.plan.specs):
@@ -247,6 +553,21 @@ class CompiledPlan:
         outs = [env[o.nid] for o in graph.outputs]
         return outs[0] if len(outs) == 1 else tuple(outs)
 
+    # -- entry point ---------------------------------------------------------
+
+    def __call__(self, bindings: dict[str, object]):
+        graph = self.plan.graph
+        for node in graph.inputs():
+            if node.name not in bindings:
+                raise KeyError(f"missing binding for input '{node.name}'")
+        if self.staged and self.pallas != "interpret" and not any(
+                isinstance(bindings[n.name], (BCSR, DictCompressed))
+                for n in graph.inputs()):
+            fn, _raw = self.staged_callable()
+            outs = fn(*[bindings[n.name] for n in graph.inputs()])
+            return outs[0] if len(outs) == 1 else tuple(outs)
+        return self._call_per_op(bindings)
+
 
 def _last_uses(plan: ExecPlan) -> dict[int, list[int]]:
     last: dict[int, int] = {}
@@ -259,6 +580,22 @@ def _last_uses(plan: ExecPlan) -> dict[int, list[int]]:
     return out
 
 
+def freed_intermediates(plan: ExecPlan) -> int:
+    """Number of intermediate values the staged trace releases at their
+    last use (graph outputs excepted) — the plan-level buffer-donation
+    count ``explain()`` reports."""
+    outs = set(plan.graph.output_ids)
+    return sum(1 for dead in _last_uses(plan).values()
+               for d in dead if d not in outs)
+
+
 def compile_plan(plan: ExecPlan, pallas: str = "never",
-                 layout=None) -> CompiledPlan:
-    return CompiledPlan(plan, pallas=pallas, layout=layout)
+                 layout=None, staged: bool = True) -> CompiledPlan:
+    """Bind an ExecPlan to its executable form.
+
+    ``staged=True`` (default) compiles the whole plan into a single
+    jitted computation (one dispatch per call, whole-plan cached);
+    ``staged=False`` keeps the per-operator interpreter dispatch — the
+    debug/fallback path, also taken automatically for sparse operands and
+    ``pallas="interpret"``."""
+    return CompiledPlan(plan, pallas=pallas, layout=layout, staged=staged)

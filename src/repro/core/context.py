@@ -43,6 +43,12 @@ class FusionContext:
     pallas : str
         Kernel lowering policy — ``"never"`` (XLA only), ``"interpret"``
         (Pallas kernels in interpreter mode, CPU-safe), or ``"tpu"``.
+    staged : bool
+        Whole-plan staged execution (default True): the entire ExecPlan
+        is compiled into a single jitted computation — one dispatch per
+        call.  False keeps per-operator dispatch (the debug/fallback
+        interpreter, also used automatically for sparse operands and
+        ``pallas="interpret"``).
     params : CostParams
         Analytical cost-model constants (roofline bandwidths, byte
         widths, the fused-input constraint).
@@ -61,6 +67,7 @@ class FusionContext:
 
     mode: str = "gen"
     pallas: str = "never"
+    staged: bool = True
     params: CostParams = field(default_factory=lambda: TPU_V5E)
     layout: Optional[Any] = None        # FusionLayout (kept Any: no jax dep)
 
@@ -79,7 +86,8 @@ class FusionContext:
                 p.sparse_idx_bytes, p.max_fused_inputs,
                 tuple(sorted(p.input_read_bw.items())),
                 p.dist.signature() if p.dist is not None else None)
-        return (self.mode, self.pallas, pkey, layout_signature(self.layout))
+        return (self.mode, self.pallas, self.staged, pkey,
+                layout_signature(self.layout))
 
     # -- scoping ------------------------------------------------------------
     def __enter__(self) -> "FusionContext":
@@ -114,7 +122,8 @@ current_config = current_context
 
 @contextlib.contextmanager
 def fusion_mode(mode: Optional[str] = None, pallas: Optional[str] = None,
-                params: Optional[CostParams] = None, layout: Any = None):
+                params: Optional[CostParams] = None, layout: Any = None,
+                staged: Optional[bool] = None):
     """Sugar: scope a context derived from the current one."""
     kw = {}
     if mode is not None:
@@ -125,6 +134,8 @@ def fusion_mode(mode: Optional[str] = None, pallas: Optional[str] = None,
         kw["params"] = params
     if layout is not None:
         kw["layout"] = layout
+    if staged is not None:
+        kw["staged"] = staged
     ctx = current_context().with_(**kw)
     with ctx:
         yield ctx

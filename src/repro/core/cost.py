@@ -172,9 +172,31 @@ def _spec_flops(graph: Graph, spec: FusedOpSpec) -> float:
     return flops
 
 
-def _local_spec_cost(graph: Graph, spec: FusedOpSpec,
-                     params: CostParams) -> float:
-    """The paper's Eq. 4 single-device operator cost (the local arm)."""
+def _boundary_gather(graph: Graph, spec: FusedOpSpec, params: CostParams,
+                     interior: Optional[dict]) -> float:
+    """Ring all-gather volume (bytes) a *segment boundary* costs: every
+    input that an upstream operator produces row-partitioned
+    (``interior[nid]`` — a distributed operator with a ``"none"``
+    epilogue) must be gathered across the row group before a consumer
+    that does not read it as a row shard can run.  Intra-segment edges —
+    a distributed consumer reading the value sharded — never pay this;
+    that asymmetry is what makes selection prefer longer distributed
+    chains."""
+    if not interior or params.dist is None:
+        return 0.0
+    n = params.dist.n
+    return sum(_hw.all_gather_bytes(node_bytes(graph.by_id[i], params), n)
+               for i in spec.inputs if interior.get(i))
+
+
+def _local_spec_cost(graph: Graph, spec: FusedOpSpec, params: CostParams,
+                     interior: Optional[dict] = None) -> float:
+    """The paper's Eq. 4 single-device operator cost (the local arm).
+
+    ``interior`` maps node id → "produced row-partitioned by an upstream
+    distributed operator"; reading such an intermediate locally first
+    re-assembles it (ring all-gather at ICI bandwidth) — the re-scatter
+    side of a distributed-segment boundary."""
     if len(spec.inputs) > params.max_fused_inputs and spec.fused:
         return math.inf                    # constraint violation (paper Z)
     root = graph.by_id[spec.root]
@@ -184,10 +206,15 @@ def _local_spec_cost(graph: Graph, spec: FusedOpSpec,
         t_r += node_bytes(n, params) / params.in_bw(i)
     t_w = node_bytes(root, params) / params.write_bw
     t_c = _spec_flops(graph, spec) / params.compute_bw
-    return t_w + max(t_r, t_c)
+    cost = t_w + max(t_r, t_c)
+    gather = _boundary_gather(graph, spec, params, interior)
+    if gather:
+        cost += gather / params.dist.ici_bw
+    return cost
 
 
-def spec_cost(graph: Graph, spec: FusedOpSpec, params: CostParams) -> float:
+def spec_cost(graph: Graph, spec: FusedOpSpec, params: CostParams,
+              interior: Optional[dict] = None) -> float:
     """Operator cost under ``params``.
 
     Without distributed geometry this is the local Eq. 4 cost.  When
@@ -195,21 +222,30 @@ def spec_cost(graph: Graph, spec: FusedOpSpec, params: CostParams) -> float:
     operator is priced on *both* execution arms and the cheaper one wins —
     candidate selection thereby enumerates ``local × distributed`` as an
     extra per-partition template dimension, and the induced plan is hybrid
-    whenever that is what the cost model prefers."""
-    local = _local_spec_cost(graph, spec, params)
+    whenever that is what the cost model prefers.
+
+    ``interior`` (nid → upstream operator produces the value
+    row-partitioned) makes the pricing *chain-aware*: a distributed
+    consumer reads such intermediates as free-flowing row shards (and is
+    anchored by them), while a local consumer pays the boundary
+    all-gather — so the model stops charging the epilogue gather +
+    re-scatter on intra-segment edges and selection extends distributed
+    runs instead of bouncing back to local after every operator."""
+    local = _local_spec_cost(graph, spec, params, interior)
     if params.dist is None or not getattr(spec, "fused", False) \
             or not math.isfinite(local):
         return local
-    arm = _dist_arm(graph, spec, params)
+    arm = _dist_arm(graph, spec, params, interior)
     return local if arm is None else min(local, arm[0])
 
 
-def spec_placement(graph: Graph, spec: FusedOpSpec,
-                   params: CostParams) -> Placement:
+def spec_placement(graph: Graph, spec: FusedOpSpec, params: CostParams,
+                   interior: Optional[dict] = None) -> Placement:
     """Resolve the local/distributed decision for one fused operator (the
     argmin :func:`spec_cost` takes, with both arms' evidence retained)."""
-    local = _local_spec_cost(graph, spec, params)
-    arm = _dist_arm(graph, spec, params) if math.isfinite(local) else None
+    local = _local_spec_cost(graph, spec, params, interior)
+    arm = _dist_arm(graph, spec, params, interior) \
+        if math.isfinite(local) else None
     if arm is None:
         return Placement("local", local, local, math.inf)
     cost, epil, coll, gather, sharded, axes, n = arm
@@ -262,7 +298,8 @@ def _shardable(graph: Graph, spec: FusedOpSpec, i: int, rows: int) -> bool:
 _MISS = object()
 
 
-def _dist_arm(graph: Graph, spec: FusedOpSpec, params: CostParams):
+def _dist_arm(graph: Graph, spec: FusedOpSpec, params: CostParams,
+              interior: Optional[dict] = None):
     """Cost the distributed variant of ``spec``, or None when no such
     variant exists (template/variant not in the registry, rows don't
     divide the shard group, or no operand actually arrives row-sharded).
@@ -273,24 +310,33 @@ def _dist_arm(graph: Graph, spec: FusedOpSpec, params: CostParams):
     ring all-gather volume; a "reduce" epilogue adds the ring all-reduce
     of the (partial) output — all at ICI bandwidth (``repro.hw``).
 
-    Memoized per spec identity on ``params.dist`` (one planning call
-    shares one DistParams): MPSkipEnum re-costs the same induced
-    operators exponentially often, and the variant derivation walks the
-    cover — pure arithmetic must stay pure arithmetic in that loop."""
+    ``interior`` marks inputs an upstream distributed operator already
+    produces row-partitioned: they anchor the operator (no layout shard
+    factor needed) and flow shard-to-shard for free, while consuming one
+    as a *broadcast* side input costs the boundary all-gather.
+
+    Memoized per (spec identity, interior inputs) on ``params.dist``
+    (one planning call shares one DistParams): MPSkipEnum re-costs the
+    same induced operators exponentially often, and the variant
+    derivation walks the cover — pure arithmetic must stay pure
+    arithmetic in that loop."""
     dp = params.dist
     if dp is None or dp.n <= 1 or spec.ttype is None:
         return None
+    interior = interior or {}
     key = (id(graph), spec.root, spec.ttype, frozenset(spec.cover),
-           tuple(spec.inputs), spec.driver)
+           tuple(spec.inputs), spec.driver,
+           tuple(sorted(i for i in spec.inputs if interior.get(i))))
     hit = dp.cache.get(key, _MISS)
     if hit is not _MISS:
         return hit
-    dp.cache[key] = out = _dist_arm_uncached(graph, spec, params, dp)
+    dp.cache[key] = out = _dist_arm_uncached(graph, spec, params, dp,
+                                             interior)
     return out
 
 
 def _dist_arm_uncached(graph: Graph, spec: FusedOpSpec, params: CostParams,
-                       dp: DistParams):
+                       dp: DistParams, interior: dict):
     from .templates import dist_epilogue
     from .cplan import _variant_of     # runtime import: cplan imports us
 
@@ -315,9 +361,11 @@ def _dist_arm_uncached(graph: Graph, spec: FusedOpSpec, params: CostParams,
         r = dp.row_factor.get(i, 1)
         c = dp.col_factor.get(i, 1)
         if _shardable(graph, spec, i, rows):
-            # row-bound: each device reads only its row slice
+            # row-bound: each device reads only its row slice — either a
+            # layout shard or an upstream operator's row-partitioned
+            # output flowing shard-to-shard (no collective on that edge)
             sharded.add(i)
-            anchored = anchored or r == n
+            anchored = anchored or r == n or bool(interior.get(i))
             t_r += b / n / params.read_bw
             if c > 1:           # column shards gathered within the row group
                 gather += _hw.all_gather_bytes(b / n, c)
@@ -326,6 +374,10 @@ def _dist_arm_uncached(graph: Graph, spec: FusedOpSpec, params: CostParams,
             t_r += b / params.read_bw
             if r * c > 1:
                 gather += _hw.all_gather_bytes(b, r * c)
+            elif interior.get(i):
+                # upstream row-partitioned intermediate consumed whole:
+                # the segment boundary's re-assembly gather
+                gather += _hw.all_gather_bytes(b, n)
     if not anchored:
         return None
     t_c = _spec_flops(graph, spec) / n / params.compute_bw
@@ -436,9 +488,17 @@ def resolve_partition(graph: Graph, memo: MemoTable, part: Partition,
     always take the maximal-fusion entry — this is what lets an
     overlapping Row plan destroy a sparse-safe Outer plan (paper §5.4).
 
+    Under distributed geometry the DP is *chain-aware*: materialized
+    inputs are resolved bottom-up first, and a child whose chosen plan is
+    a distributed operator with a row-partitioned output marks its node
+    ``interior`` — the parent's cost then sees the value as a free
+    shard-to-shard edge on the distributed arm and as a boundary
+    all-gather on the local arm (see :func:`spec_cost`).
+
     Returns one spec per materialized operator in dependency order."""
     choice: dict[int, FusedOpSpec] = {}
     subcost: dict[int, float] = {}
+    interior: dict[int, bool] = {}
 
     def best(nid: int) -> float:
         """Memoized cost of materializing nid (and everything below it)."""
@@ -461,8 +521,8 @@ def resolve_partition(graph: Graph, memo: MemoTable, part: Partition,
         best_c, best_s = math.inf, None
         for e in cands:
             spec = _build_spec(graph, memo, nid, e, banned)
-            c = spec_cost(graph, spec, params) \
-                + sum(best(i) for i in spec.inputs)
+            child = sum(best(i) for i in spec.inputs)
+            c = spec_cost(graph, spec, params, interior) + child
             pref = _TIE_PREF.get(spec.ttype, 9) if spec.ttype else 9
             if c < best_c * (1 - 1e-12) or (
                     best_s is not None and abs(c - best_c) <= best_c * 1e-9
@@ -471,6 +531,10 @@ def resolve_partition(graph: Graph, memo: MemoTable, part: Partition,
                 best_c, best_s = c, spec
         choice[nid] = best_s            # type: ignore[assignment]
         subcost[nid] = best_c
+        if params.dist is not None and best_s is not None \
+                and getattr(best_s, "fused", False):
+            interior[nid] = row_partitioned(
+                spec_placement(graph, best_s, params, interior))
         return best_c
 
     # commit: walk the chosen DAG from roots/exits, emit specs once each
@@ -496,13 +560,39 @@ def resolve_partition(graph: Graph, memo: MemoTable, part: Partition,
     return specs
 
 
+def row_partitioned(pl: Optional[Placement]) -> bool:
+    """Does this placement produce its output as row shards (the value an
+    intra-segment consumer may read shard-to-shard)?  The single source
+    of the rule for the selection DP, :func:`update_interior`, and the
+    post-selection placement walk."""
+    return pl is not None and pl.arm == "distributed" \
+        and pl.epilogue == "none"
+
+
+def update_interior(graph: Graph, spec, params: CostParams,
+                    interior: dict) -> None:
+    """Record whether ``spec``'s output is produced row-partitioned
+    (distributed arm, ``"none"`` epilogue) — the walker state both the
+    selection DP and the post-selection placement pass thread through
+    :func:`spec_cost` in dependency order."""
+    if params.dist is None or not getattr(spec, "fused", False):
+        return
+    pl = spec_placement(graph, spec, params, interior)
+    interior[spec.root] = row_partitioned(pl)
+
+
 def partition_cost(graph: Graph, memo: MemoTable, part: Partition,
                    banned: set[Point], params: CostParams,
                    ub: float = math.inf) -> float:
-    """GETPLANCOST with early abort once the partial cost exceeds ub."""
+    """GETPLANCOST with early abort once the partial cost exceeds ub.
+    Walks the induced specs in dependency order so chain-aware
+    distributed pricing sees the same interior-producer state the DP in
+    :func:`resolve_partition` used."""
     total = 0.0
+    interior: dict[int, bool] = {}
     for spec in resolve_partition(graph, memo, part, banned, params):
-        total += spec_cost(graph, spec, params)
+        total += spec_cost(graph, spec, params, interior)
+        update_interior(graph, spec, params, interior)
         if total >= ub:
             return math.inf
     return total
@@ -513,7 +603,13 @@ def partition_cost(graph: Graph, memo: MemoTable, part: Partition,
 def static_lower_bound(graph: Graph, memo: MemoTable, part: Partition,
                        params: CostParams) -> float:
     """C̲_{P_i}: read partition inputs once + minimal (sparsity-exploited)
-    compute + write partition roots/exits — a true lower bound of any plan."""
+    compute + write partition roots/exits — a true lower bound of any plan.
+
+    Under distributed geometry every operator may run row-partitioned —
+    reads, compute, and writes all scale 1/n — so the bound divides by
+    the shard degree to stay a *valid* lower bound of the distributed
+    arm (otherwise cost-based pruning would discard exactly the
+    materialization assignments that enable long distributed chains)."""
     t_r = sum(node_bytes(graph.by_id[i], params) / params.in_bw(i)
               for i in part.inputs)
     sp_min = min((graph.by_id[i].sparsity for i in part.inputs
@@ -522,7 +618,10 @@ def static_lower_bound(graph: Graph, memo: MemoTable, part: Partition,
         * max(sp_min, 1e-12) / params.compute_bw
     t_w = sum(node_bytes(graph.by_id[r], params) / params.write_bw
               for r in set(part.roots) | part.exits)
-    return max(t_r, t_c) + t_w
+    bound = max(t_r, t_c) + t_w
+    if params.dist is not None and params.dist.n > 1:
+        bound /= params.dist.n
+    return bound
 
 
 def mp_cost(graph: Graph, banned: set[Point], params: CostParams,
@@ -530,7 +629,10 @@ def mp_cost(graph: Graph, banned: set[Point], params: CostParams,
     """GETMPCOST: each distinct materialization target forced by q costs at
     least one write plus one read.  Targets in ``written_anyway`` (partition
     roots/exits, whose write is already in the static bound) only add the
-    read — otherwise the bound would overestimate and mis-prune."""
+    read — otherwise the bound would overestimate and mis-prune.  Like
+    :func:`static_lower_bound`, the distributed arm may write and re-read
+    a materialization target row-partitioned (1/n per device), so the
+    bound scales by the shard degree."""
     targets = {t for (_, t) in banned}
     total = 0.0
     for t in targets:
@@ -538,4 +640,6 @@ def mp_cost(graph: Graph, banned: set[Point], params: CostParams,
         total += b / params.read_bw
         if t not in written_anyway:
             total += b / params.write_bw
+    if params.dist is not None and params.dist.n > 1:
+        total /= params.dist.n
     return total

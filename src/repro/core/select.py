@@ -21,9 +21,9 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from repro import hw as _hw
-from .cost import (CostParams, FusedOpSpec, Placement, TPU_V5E,
-                   partition_cost, resolve_partition, spec_cost,
-                   spec_placement)
+from .cost import (CostParams, FusedOpSpec, Placement, TPU_V5E, node_bytes,
+                   partition_cost, resolve_partition, row_partitioned,
+                   spec_cost, spec_placement)
 from .enumerate import EnumStats, mp_skip_enum
 from .explore import ExploreStats, explore
 from .ir import Graph
@@ -49,6 +49,23 @@ class MultiAggSpec:
     driver = None
 
 
+@dataclass(frozen=True)
+class Segment:
+    """A maximal run of adjacent distributed-placed operators that
+    executes inside a single ``shard_map`` region: intra-segment
+    row-partitioned intermediates flow shard-to-shard instead of being
+    gathered and re-scattered at every operator boundary."""
+
+    indices: tuple[int, ...]       # positions in ExecPlan.specs, in order
+    axes: tuple[str, ...]          # row-shard mesh axes
+    n: int                         # row-shard degree
+    #: (producer spec idx, consumer spec idx, nid) row-sharded edges
+    sharded_edges: tuple[tuple[int, int, int], ...]
+    #: boundary all-gather volume the fused region removes (bytes): one
+    #: ring all-gather of each row-sharded intra-segment intermediate
+    removed_gather_bytes: float
+
+
 @dataclass
 class ExecPlan:
     graph: Graph
@@ -57,6 +74,9 @@ class ExecPlan:
     memo: Optional[MemoTable] = None
     enum_stats: Optional[EnumStats] = None
     explore_stats: Optional[ExploreStats] = None
+    #: contiguous distributed runs (see :class:`Segment`); empty when the
+    #: plan was selected without distributed geometry
+    segments: tuple = ()
 
     def fused_specs(self) -> list:
         return [s for s in self.specs if getattr(s, "fused", False)]
@@ -109,7 +129,10 @@ def select(graph: Graph, memo: MemoTable, mode: str = "gen",
     specs = _topo_order(graph, specs)
     specs = _combine_multi_aggs(graph, specs, params)
     if params.dist is not None and params.dist.n > 1:
-        _annotate_placements(graph, specs, params)
+        # re-walk the final plan in dependency order: pin placements with
+        # chain-aware pricing and make that walk the authoritative plan
+        # cost (the executed plan is the costed plan)
+        total_cost = _annotate_placements(graph, specs, params)
     return specs, total_cost
 
 
@@ -125,7 +148,9 @@ def plan(graph: Graph, mode: str = "gen", params: CostParams = TPU_V5E,
         memo = explore(graph, prune_dominated=dom, stats=ex_st)
     en_st = EnumStats()
     specs, cost = select(graph, memo, mode, params, enum_stats=en_st)
-    return ExecPlan(graph, specs, cost, memo, en_st, ex_st)
+    segments = annotate_segments(graph, specs, params)
+    return ExecPlan(graph, specs, cost, memo, en_st, ex_st,
+                    segments=segments)
 
 
 # -- assignment policies -----------------------------------------------------
@@ -147,18 +172,25 @@ def _assignment(graph: Graph, memo: MemoTable, part: Partition, mode: str,
 # -- local/distributed placement (hybrid plans) --------------------------------
 
 def _annotate_placements(graph: Graph, specs: list,
-                         params: CostParams) -> None:
+                         params: CostParams) -> float:
     """Pin the local-vs-distributed decision :func:`spec_cost` already
     priced onto every fused operator, so codegen executes — and
-    ``explain()`` reports — exactly the costed arm.
+    ``explain()`` reports — exactly the costed arm.  Walks the plan in
+    dependency order threading the interior-producer state (a
+    row-partitioned intermediate anchors its distributed consumers and
+    charges local ones the boundary gather), and returns the resulting
+    total plan cost.
 
     A combined multi-aggregate distributes only when *every* member
     aggregate does (all sum-reduced partials ride one ``psum`` of the
     stacked (k, 1) output); a single local member keeps the whole
     operator local rather than splitting one scan across arms."""
+    interior: dict[int, bool] = {}
+    total = 0.0
     for s in specs:
         if isinstance(s, MultiAggSpec):
-            pls = [spec_placement(graph, p, params) for p in s.parts]
+            pls = [spec_placement(graph, p, params, interior)
+                   for p in s.parts]
             if pls and all(p.arm == "distributed" and p.epilogue == "psum"
                            for p in pls):
                 n = pls[0].n
@@ -178,8 +210,91 @@ def _annotate_placements(graph: Graph, specs: list,
                 local = sum(p.local_cost for p in pls) if pls else 0.0
                 dist = sum(p.dist_cost for p in pls) if pls else math.inf
                 s.placement = Placement("local", local, local, dist)
+            total += s.placement.cost
+            for r in s.roots:
+                interior[r] = False       # psum output is replicated
         elif getattr(s, "fused", False):
-            s.placement = spec_placement(graph, s, params)
+            s.placement = spec_placement(graph, s, params, interior)
+            total += s.placement.cost
+            interior[s.root] = row_partitioned(s.placement)
+        else:
+            total += spec_cost(graph, s, params, interior)
+    return total
+
+
+def annotate_segments(graph: Graph, specs: list,
+                      params: CostParams) -> tuple:
+    """Group maximal runs of *adjacent* distributed-placed operators into
+    :class:`Segment`\\ s — the units codegen lowers into a single
+    ``shard_map`` region.
+
+    Two consecutive distributed specs stay in one run when they share the
+    row-shard group (axes, n) and their data flow is representable inside
+    one region: a value produced row-partitioned in the run (``"none"``
+    epilogue) must be read as a row shard by every in-run consumer, a
+    reduced value (replicated after its collective) must be read
+    broadcast, and an external operand consumed by several run members
+    must be sharded for all of them or none.  Violations split the run —
+    correctness over region length."""
+    if params.dist is None or params.dist.n <= 1:
+        return ()
+    segments: list[Segment] = []
+    run: list[int] = []
+
+    def roots_of(s) -> tuple[int, ...]:
+        return tuple(s.roots) if isinstance(s, MultiAggSpec) else (s.root,)
+
+    def compatible(idx: int) -> bool:
+        s = specs[idx]
+        pl = s.placement
+        head = specs[run[0]].placement
+        if pl.axes != head.axes or pl.n != head.n:
+            return False
+        produced = {r: specs[j].placement.epilogue
+                    for j in run for r in roots_of(specs[j])}
+        for i in s.inputs:
+            epil = produced.get(i)
+            if epil == "none" and i not in pl.sharded:
+                return False          # would need an in-region gather
+            if epil is not None and epil != "none" and i in pl.sharded:
+                return False          # replicated value read as a shard
+            if epil is None:          # shared external operand: one view
+                for j in run:
+                    pj = specs[j].placement
+                    if i in specs[j].inputs and \
+                            (i in pj.sharded) != (i in pl.sharded):
+                        return False
+        return True
+
+    def flush() -> None:
+        if len(run) >= 2:
+            head = specs[run[0]].placement
+            produced = {r: (j, specs[j].placement.epilogue)
+                        for j in run for r in roots_of(specs[j])}
+            edges = []
+            saved = 0.0
+            for c in run:
+                for i in specs[c].inputs:
+                    hit = produced.get(i)
+                    if hit is not None and hit[1] == "none" \
+                            and i in specs[c].placement.sharded:
+                        edges.append((hit[0], c, i))
+                        saved += _hw.all_gather_bytes(
+                            node_bytes(graph.by_id[i], params), head.n)
+            segments.append(Segment(tuple(run), head.axes, head.n,
+                                    tuple(edges), saved))
+        run.clear()
+
+    for idx, s in enumerate(specs):
+        pl = getattr(s, "placement", None)
+        if pl is None or pl.arm != "distributed":
+            flush()
+            continue
+        if run and not compatible(idx):
+            flush()
+        run.append(idx)
+    flush()
+    return tuple(segments)
 
 
 # -- helpers -------------------------------------------------------------------

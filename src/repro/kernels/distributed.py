@@ -19,6 +19,18 @@ plan's :class:`~repro.core.cost.Placement` prescribes:
   ``jax.lax`` collective and replicate the reduced result (multi-
   aggregates ride one ``psum`` of the stacked (k, 1) output).
 
+**Multi-operator bodies** (:func:`build_segment_fn`): a plan
+:class:`~repro.core.select.Segment` — a maximal run of adjacent
+distributed-placed operators — lowers to *one* ``shard_map`` region whose
+body runs every member's generated program in order over the local row
+panels.  A row-partitioned intermediate (``"none"`` epilogue) consumed
+inside the segment simply stays a local panel: no global materialization,
+no gather/re-scatter at the operator boundary.  Reduced intermediates
+(``psum``/``pmin``/``pmax``) complete their collective inside the body and
+flow replicated.  Only segment *outputs* — values a spec outside the
+segment (or the caller) reads — exit the region, sharded or replicated per
+their epilogue.
+
 Only *real* multi-device meshes execute here; on an abstract
 ``LogicalMesh`` (planning from a CPU container) or when an operand is
 block-sparse, the plan's distributed placement is costed and reported but
@@ -30,6 +42,7 @@ from __future__ import annotations
 
 import threading
 from collections import OrderedDict
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 import jax
@@ -41,7 +54,9 @@ from . import ref
 #: analogue of the plan cache: ``jax.jit`` memoizes per function object,
 #: so rebuilding the closure every CompiledPlan (e.g. ``fuse_exprs`` in a
 #: loop) would retrace+recompile each call.  Keyed by (structural CPlan
-#: hash, mesh, epilogue, axes, per-bind shard mask); bounded LRU.
+#: hash, mesh, epilogue, axes, per-bind shard mask) — the mesh is part of
+#: the key, so one CompiledPlan re-targeted at a different real mesh can
+#: never be served a stale executable; bounded LRU.
 _FN_CACHE: "OrderedDict[tuple, Callable]" = OrderedDict()
 _FN_CACHE_MAX = 256
 _FN_LOCK = threading.Lock()
@@ -57,6 +72,106 @@ def _collective(epilogue: str, axes) -> Optional[Callable]:
     return None                                    # "none": sharded write
 
 
+@dataclass(frozen=True)
+class SegmentItem:
+    """One operator of a shard_map segment body."""
+    cplan: CPlan
+    placement: object              # repro.core.cost.Placement
+    roots: tuple[int, ...]         # output nids (>1: combined multi-agg)
+    export: bool                   # value leaves the region?
+
+
+def _realizable_axes(mesh, placement):
+    """(axes, ok): the placement's row-shard axes on this mesh, or ok=False
+    when the runtime cannot realize the plan's shard group."""
+    from repro.dist.sharding import axis_size
+    axes = tuple(a for a in placement.axes if a in mesh.axis_names)
+    if not axes or axis_size(mesh, axes) != placement.n:
+        return (), False
+    return axes, True
+
+
+def build_segment_fn(items: list[SegmentItem], mesh):
+    """Lower one plan segment (≥1 distributed operators in dependency
+    order) into a single ``shard_map`` region.
+
+    Returns ``(fn, ext_nids, epilogues)`` — ``fn`` is the *unjitted*
+    ``shard_map`` callable taking the external bind arrays in ``ext_nids``
+    order and returning the exported items' outputs in item order (each
+    sharded ``P(axes, None)`` for a ``"none"`` epilogue, replicated
+    otherwise); ``epilogues`` lists the exported epilogues.  Returns None
+    when the mesh cannot realize the placement (abstract mesh, axis
+    mismatch, indivisible external shard, or an operand both sharded and
+    broadcast across members — the caller then falls back to per-operator
+    execution)."""
+    try:
+        from jax.sharding import Mesh, PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+    except ImportError:                            # pragma: no cover
+        return None
+    if not isinstance(mesh, Mesh) or not items:
+        return None
+    axes, ok = _realizable_axes(mesh, items[0].placement)
+    if not ok:
+        return None
+    n = items[0].placement.n
+
+    produced: set[int] = set()
+    ext: list[int] = []
+    ext_shard: dict[int, bool] = {}
+    for it in items:
+        ax_it, ok = _realizable_axes(mesh, it.placement)
+        if not ok or ax_it != axes:
+            return None
+        for b in it.cplan.binds:
+            if b.nid in produced:
+                continue                           # intra-segment edge
+            sh = b.nid in it.placement.sharded
+            if b.nid in ext_shard:
+                if ext_shard[b.nid] != sh:
+                    return None       # inconsistent view of one operand
+                continue
+            if sh and b.shape[0] % n:
+                return None                        # defensive: plan drift
+            ext.append(b.nid)
+            ext_shard[b.nid] = sh
+        produced.update(it.roots)
+
+    in_specs = tuple(P(axes, None) if ext_shard[nid] else P()
+                     for nid in ext)
+    out_specs = tuple(P(axes, None) if it.placement.epilogue == "none"
+                      else P() for it in items if it.export)
+    if not out_specs:
+        return None
+    steps = [(it.cplan, [b.nid for b in it.cplan.binds],
+              _collective(it.placement.epilogue, axes), it.roots, it.export)
+             for it in items]
+
+    def body(*arrs):
+        # each member's generated operator body, verbatim, on the local
+        # row panels; intra-segment "none" outputs stay local panels
+        env = dict(zip(ext, arrs))
+        outs = []
+        for cplan, nids, reduce_fn, roots, export in steps:
+            out = ref.execute_dense(cplan,
+                                    {nid: env[nid] for nid in nids})
+            if reduce_fn is not None:
+                out = reduce_fn(out)
+            if len(roots) > 1:                     # combined multi-agg
+                for k, r in enumerate(roots):
+                    env[r] = out[k].reshape(1, 1)
+            else:
+                env[roots[0]] = out
+            if export:
+                outs.append(out)
+        return tuple(outs)
+
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_rep=False)
+    epilogues = tuple(it.placement.epilogue for it in items if it.export)
+    return fn, tuple(ext), epilogues
+
+
 def build_dist_fn(cplan: CPlan, mesh, placement) -> Optional[Callable]:
     """Compile one distributed fused operator, or None when the runtime
     cannot realize the placement (abstract mesh, axis mismatch, or a
@@ -65,22 +180,19 @@ def build_dist_fn(cplan: CPlan, mesh, placement) -> Optional[Callable]:
 
     The returned callable takes the bound input arrays in ``cplan.binds``
     order and returns the operator output as a global array (row-sharded
-    for "none" epilogues, replicated for reductions)."""
+    for "none" epilogues, replicated for reductions).  This is the
+    per-operator dispatch path; whole-plan staged execution lowers runs
+    of adjacent distributed operators through :func:`build_segment_fn`
+    instead."""
     try:
-        from jax.sharding import Mesh, PartitionSpec as P
-        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh
     except ImportError:                            # pragma: no cover
         return None
     if not isinstance(mesh, Mesh):
         return None                                # abstract: cost-only
-    from repro.dist.sharding import axis_size
-    axes = tuple(a for a in placement.axes if a in mesh.axis_names)
-    n = axis_size(mesh, axes)
-    if not axes or n != placement.n:
+    axes, ok = _realizable_axes(mesh, placement)
+    if not ok:
         return None
-    for b in cplan.binds:
-        if b.nid in placement.sharded and b.shape[0] % n:
-            return None                            # defensive: plan drift
 
     # structural hit: a re-traced or structurally-equal plan reuses the
     # jitted shard_map operator (binding is positional, like GeneratedOp)
@@ -92,18 +204,14 @@ def build_dist_fn(cplan: CPlan, mesh, placement) -> Optional[Callable]:
             _FN_CACHE.move_to_end(key)
             return hit
 
-    in_specs = tuple(P(axes, None) if m else P() for m in shard_mask)
-    reduce_fn = _collective(placement.epilogue, axes)
-    out_specs = P() if reduce_fn is not None else P(axes, None)
-    nids = [b.nid for b in cplan.binds]
-
-    def body(*arrs):
-        # the generated operator body, verbatim, on the local row panel
-        out = ref.execute_dense(cplan, dict(zip(nids, arrs)))
-        return reduce_fn(out) if reduce_fn is not None else out
-
-    fn = jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, check_rep=False))
+    roots = getattr(cplan, "roots", None) or (cplan.prog_root,)
+    seg = build_segment_fn(
+        [SegmentItem(cplan, placement, tuple(roots), True)], mesh)
+    if seg is None:
+        return None
+    seg_fn, ext, _epil = seg
+    assert ext == tuple(b.nid for b in cplan.binds)
+    fn = jax.jit(lambda *vals: seg_fn(*vals)[0])
     with _FN_LOCK:
         _FN_CACHE[key] = fn
         while len(_FN_CACHE) > _FN_CACHE_MAX:

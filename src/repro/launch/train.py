@@ -33,16 +33,21 @@ class TrainConfig:
     #: may place it distributed (row-partitioned, no collective) while the
     #: rest of the step stays under GSPMD.  None keeps local planning.
     fusion_layout: Optional[object] = None
+    #: whole-plan staged execution of the fused loss (False: per-operator
+    #: dispatch — the debug path; see repro.core.codegen.CompiledPlan)
+    fusion_staged: bool = True
     opt: adamw.OptConfig = adamw.OptConfig()
 
 
 def _fused_lse(logits2d: jnp.ndarray, mode: str,
-               layout=None) -> jnp.ndarray:
+               layout=None, staged: bool = True) -> jnp.ndarray:
     """log-sum-exp rows through the fusion planner (Row template:
     rowmax → sub → exp → rowsums → log → add), staged explicitly:
-    trace → plan → compile once per (shape, mode, layout), then reuse
-    the Compiled operator.  Differentiable: the training backward pass
-    runs the planned gradient DAG via the operator's custom_vjp."""
+    trace → plan → compile once per (shape, mode, layout, staged), then
+    reuse the Compiled operator — whole-plan jitted by default
+    (``staged=False`` keeps per-operator dispatch for debugging).
+    Differentiable: the training backward pass runs the planned gradient
+    DAG via the operator's custom_vjp."""
     from repro.core import fused, ir
     from repro.core.layout import layout_signature
 
@@ -53,11 +58,12 @@ def _fused_lse(logits2d: jnp.ndarray, mode: str,
             return ir.log(ir.exp(L - m).rowsums()) + m
         _fused_lse._lse = _lse
         _fused_lse._ops = {}
-    key = (tuple(logits2d.shape), mode, layout_signature(layout))
+    key = (tuple(logits2d.shape), mode, layout_signature(layout), staged)
     op = _fused_lse._ops.get(key)
     if op is None:
         op = _fused_lse._lse.trace(logits2d) \
-                            .plan(mode=mode, layout=layout).compile()
+                            .plan(mode=mode, layout=layout) \
+                            .compile(staged=staged)
         _fused_lse._ops[key] = op
     return op(logits2d)
 
@@ -85,7 +91,8 @@ def _ce(logits, targets, tc: TrainConfig):
         return lm_loss(logits, targets)
     V = logits.shape[-1]
     flat = logits.reshape(-1, V).astype(jnp.float32)
-    lse = _fused_lse(flat, tc.fusion, layout=tc.fusion_layout)
+    lse = _fused_lse(flat, tc.fusion, layout=tc.fusion_layout,
+                     staged=tc.fusion_staged)
     tgt = jnp.take_along_axis(flat, targets.reshape(-1, 1), axis=-1)
     return jnp.mean(lse - tgt)
 

@@ -25,6 +25,7 @@ PINNED_ALL = [
     "ir",
     "plan",
     "plan_cache_stats",
+    "whole_plan_cache_stats",
 ]
 
 

@@ -271,3 +271,105 @@ def test_real_mesh_shard_map_parity():
                          env=env)
     assert res.returncode == 0, res.stdout + res.stderr
     assert "OK" in res.stdout
+
+
+# --------------------------------------------------------------------------
+# shard-spanning segments: adjacent distributed operators fuse into ONE
+# shard_map region (whole-plan staged execution)
+# --------------------------------------------------------------------------
+
+_SEGMENT_PROG = """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core import fused, ir
+
+assert len(jax.devices()) == 8, jax.devices()
+mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+
+# A wide shared cell chain: materializing A (6 reads -> 1 write) beats
+# recomputing it inside all three consumers, so selection materializes A
+# as a distributed row-partitioned operator and the consumers chain off
+# it — a 3-operator distributed run plus a local w-space aggregate.
+def expr(X1, X2, X3, X4, X5, X6, w):
+    A = ir.sigmoid(X1 + X2 + X3 + X4 + X5 + X6)
+    return ((A * X1 + X2).sum(), (A - X3).rowsums(),
+            (A * A + X4).sum(), (w ** 2).sum())
+
+f = fused(expr)
+m, n = 4096, 64
+rng = np.random.default_rng(11)
+Xs = [jnp.asarray(rng.normal(size=(m, n)), jnp.float32) for _ in range(6)]
+w = jnp.asarray(rng.normal(size=(10, 1)), jnp.float32)
+
+tr = f.trace(*Xs, w)
+planned = tr.plan(mode="gen", layout=mesh)
+rep = planned.explain()
+
+# hybrid: >= 2 adjacent distributed operators + a local one
+arms = [o["placement"] for o in rep["winner"]["operators"]]
+assert "local" in arms, arms
+segs = rep["distributed"]["segments"]
+assert len(segs) == 1, segs
+seg = segs[0]
+assert seg["n_operators"] >= 2, seg
+assert seg["n_sharded_edges"] >= 1, seg
+assert seg["removed_collective_bytes"] > 0, seg
+assert rep["distributed"]["removed_collective_bytes"] \
+    == seg["removed_collective_bytes"]
+
+# the segment executes inside a SINGLE shard_map region: inspect the
+# staged whole-plan jaxpr
+compiled = planned.compile()
+outs = compiled(*Xs, w)
+_fn, raw = compiled._cplan.staged_callable()
+jaxpr = str(jax.make_jaxpr(raw)(*Xs, w))
+n_regions = jaxpr.count("shard_map")
+assert n_regions == 1, f"expected one shard_map region, found {n_regions}"
+
+# numeric parity with the all-local plan
+local = tr.plan(mode="gen").compile()(*Xs, w)
+for a, b in zip(outs, local):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+print("OK", seg["n_operators"], seg["removed_collective_bytes"])
+"""
+
+
+def test_segment_single_shard_map_region():
+    """A hybrid plan with ≥2 adjacent distributed operators executes them
+    inside one ``shard_map`` region (jaxpr inspection), with ``explain()``
+    reporting the segment and the removed intra-segment collective
+    bytes — and the same numbers as the all-local plan."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=str(Path(__file__).resolve().parents[1] / "src"))
+    res = subprocess.run([sys.executable, "-c", _SEGMENT_PROG],
+                         capture_output=True, text=True, timeout=300,
+                         env=env)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "OK" in res.stdout
+
+
+def test_segment_annotation_abstract_mesh():
+    """Segment annotation is a plan property, not a runtime one: the same
+    expression planned on an abstract 1×8 mesh reports the segment (and
+    its removed boundary volume) from a CPU container with no devices."""
+    def expr(X1, X2, X3, X4, X5, X6, w):
+        A = ir.sigmoid(X1 + X2 + X3 + X4 + X5 + X6)
+        return ((A * X1 + X2).sum(), (A - X3).rowsums(),
+                (A * A + X4).sum(), (w ** 2).sum())
+
+    f = fused(expr)
+    shapes = [np.zeros((4096, 64), np.float32) for _ in range(6)]
+    w = np.zeros((10, 1), np.float32)
+    planned = f.trace(*shapes, w).plan(mode="gen",
+                                       layout=LogicalMesh({"data": 8}))
+    segs = planned.eplan.segments
+    assert len(segs) == 1
+    assert len(segs[0].indices) >= 2
+    assert segs[0].removed_gather_bytes > 0
+    assert segs[0].sharded_edges      # a materialized A flows shard-to-shard
+    # indices are adjacent spec positions
+    ix = segs[0].indices
+    assert list(ix) == list(range(ix[0], ix[-1] + 1))
