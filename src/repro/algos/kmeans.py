@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import ir, fused, FusionContext
+from repro.core import fused, FusionContext
 
 
 @fused

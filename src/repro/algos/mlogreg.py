@@ -15,7 +15,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .util import fs
 from repro.core import ir, fused, FusionContext
 
 
@@ -60,7 +59,6 @@ def _nll_obj_reg(X, B, Y, lam):
 
 @fused
 def _hvp(X, v, P):
-    k = P.shape[1]
     Q = P * (X @ v)
     return X.T @ (Q - P * Q.rowsums())
 

@@ -22,7 +22,10 @@ from .context import (FusionContext, current_config, current_context,
 from .cost import CostParams, TPU_V5E
 from .grad import NonDifferentiableError
 from .layout import FusionLayout
+from .partitions import PlanInvariantError
 from .select import plan
+from .verify import (Diagnostic, VerificationError, VerifyReport,
+                     verify_plan)
 
 __all__ = [
     # IR + planning entry points
@@ -35,7 +38,10 @@ __all__ = [
     "FusionLayout",
     # cost model
     "CostParams", "TPU_V5E",
+    # plan verifier
+    "Diagnostic", "VerifyReport", "verify_plan",
     # introspection + errors
     "plan_cache_stats", "whole_plan_cache_stats",
     "NonDifferentiableError", "FusionInputError",
+    "PlanInvariantError", "VerificationError",
 ]

@@ -50,14 +50,13 @@ import jax.numpy as jnp
 
 from repro.kernels.blocksparse import BCSR, DictCompressed
 from . import ir
-from .codegen import (CompiledPlan, PLAN_CACHE, compile_plan,
-                      freed_intermediates)
-from .context import (FusionContext, current_config, current_context,
-                      fusion_mode)
-from .cost import CostParams, TPU_V5E
-from .grad import NonDifferentiableError, vjp_graph
+from .codegen import CompiledPlan, compile_plan, freed_intermediates
+from .context import FusionContext, current_context
+from .cost import CostParams
+from .grad import vjp_graph
 from .layout import FusionLayout, ensure_layout, layout_cost_params
 from .select import ExecPlan, MODES, MultiAggSpec, plan as plan_graph
+from .verify import VerifyReport, verify_exec, verify_plan
 
 
 class FusionInputError(TypeError):
@@ -204,12 +203,27 @@ class Traced:
                                                  extra_shapes=shapes))
         eff = layout_cost_params(ctx.layout, self.graph, ctx.params)
         eplan = plan_graph(self.graph, ctx.mode, eff)
-        return Planned(self, ctx, eplan)
+        return _verified_planned(self, ctx, eplan)
 
 
 # --------------------------------------------------------------------------
 # stage 2: Planned — a selected ExecPlan with costs and an explain() report
 # --------------------------------------------------------------------------
+
+def _verified_planned(traced: Traced, ctx: FusionContext,
+                      eplan: ExecPlan) -> "Planned":
+    """The plan() stage boundary: every ExecPlan entering stage 2 passes
+    the plan verifier at the context's level (``"cheap"`` by default,
+    ``"strict"`` for the full pass, ``"off"`` to skip).  Error-severity
+    diagnostics raise :class:`~repro.core.verify.VerificationError`
+    here — before any code generation can execute the broken plan."""
+    planned = Planned(traced, ctx, eplan)
+    if ctx.verify != "off":
+        report = verify_plan(eplan, level=ctx.verify, pallas=ctx.pallas)
+        report.raise_if_errors()
+        planned._verify = report
+    return planned
+
 
 def _spec_signature(graph: ir.Graph, spec) -> dict:
     def label(nid: int) -> str:
@@ -237,6 +251,8 @@ class Planned:
     context: FusionContext
     eplan: ExecPlan
     _bwd: Optional["Planned"] = field(default=None, repr=False)
+    #: VerifyReport from the plan() stage boundary (None: verify="off")
+    _verify: Optional[VerifyReport] = field(default=None, repr=False)
 
     @property
     def cost(self) -> float:
@@ -288,7 +304,7 @@ class Planned:
                                  "sparsity": 1.0}
             btr = Traced(self.traced.name + ":vjp", bgraph,
                          list(self.traced.in_names) + ct_names, in_meta)
-            self._bwd = Planned(
+            self._bwd = _verified_planned(
                 btr, self.context,
                 plan_graph(bgraph, self.context.mode,
                            layout_cost_params(self.context.layout, bgraph,
@@ -314,7 +330,9 @@ class Planned:
         volume, and the plan ``segments`` — runs of adjacent distributed
         operators that execute inside a single ``shard_map`` region,
         each with the intra-segment boundary volume the fused region
-        removes (``removed_collective_bytes``).
+        removes (``removed_collective_bytes``).  ``verify`` carries the
+        plan verifier's report (:mod:`repro.core.verify`): the level it
+        ran at, error/warning counts, and every diagnostic.
         ``include_backward=True`` appends the planned gradient DAG's
         report (see :meth:`backward`)."""
         ex, en = self.eplan.explore_stats, self.eplan.enum_stats
@@ -347,6 +365,12 @@ class Planned:
             },
             "layout": None,
         }
+        if self._verify is None and self.context.verify != "off":
+            self._verify = verify_plan(self.eplan,
+                                       level=self.context.verify,
+                                       pallas=self.context.pallas)
+        report["verify"] = (self._verify.summary()
+                           if self._verify is not None else None)
         if self.context.layout is not None:
             lay = self.context.layout
             report["layout"] = {
@@ -413,6 +437,15 @@ class Planned:
             ctx = ctx.with_(pallas=pallas)
         if staged is not None:
             ctx = ctx.with_(staged=staged)
+        if ctx.verify != "off":
+            # the compile() stage boundary re-checks the execution-level
+            # invariants (liveness, aliasing, whole-plan key): the plan
+            # object is mutable between stages
+            report = VerifyReport(level=ctx.verify)
+            report.diagnostics.extend(verify_exec(
+                self.eplan, strict=ctx.verify == "strict",
+                pallas=ctx.pallas))
+            report.raise_if_errors()
         return Compiled(replace(self, context=ctx))
 
 

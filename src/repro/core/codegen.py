@@ -580,6 +580,50 @@ def _last_uses(plan: ExecPlan) -> dict[int, list[int]]:
     return out
 
 
+def staged_plan_key(plan: ExecPlan, pallas: str = "never",
+                    cache: Optional[PlanCache] = None) -> tuple:
+    """The structural whole-plan cache key of the local (mesh-free)
+    staged lowering, computed without tracing or jitting anything —
+    the replay the plan verifier's key-completeness check
+    (:func:`repro.core.verify.verify_exec`, EXE004) runs: every value a
+    step consumes must resolve to a canonical env token, so a
+    ``KeyError`` here means the plan wires a value no step produces.
+
+    Mirrors the mesh-free path of :meth:`CompiledPlan._build_staged`
+    (same token scheme, same key layout) — keep the two in sync."""
+    cache = cache if cache is not None else PLAN_CACHE
+    graph = plan.graph
+    in_nids = tuple(n.nid for n in graph.inputs())
+    output_ids = tuple(o.nid for o in graph.outputs)
+    canon: dict[int, tuple] = {nid: ("in", p)
+                               for p, nid in enumerate(in_nids)}
+    for n in graph.nodes:
+        if n.op == "lit":
+            canon[n.nid] = ("lit", float(n.attrs["value"]))
+
+    key_parts: list[tuple] = []
+    for spec in plan.specs:
+        step_idx = len(key_parts)
+        if isinstance(spec, MultiAggSpec) or (
+                isinstance(spec, FusedOpSpec) and spec.fused):
+            _op, cplan = cache.get_or_build(graph, spec)
+            bind_nids = tuple(b.nid for b in cplan.binds)
+            key_parts.append(("fused", cplan.cache_key(),
+                              tuple(canon[nid] for nid in bind_nids)))
+            for k, r in enumerate(_spec_roots(spec)):
+                canon[r] = ("s", step_idx, 0, k)
+        else:
+            node = graph.by_id[spec.root]
+            key_parts.append((
+                "basic", node.op,
+                tuple(sorted(node.attrs.items())), node.shape,
+                tuple(canon[i.nid] if i.op != "lit"
+                      else ("lit", float(i.attrs["value"]))
+                      for i in node.inputs)))
+            canon[spec.root] = ("s", step_idx, 0, 0)
+    return (tuple(key_parts), tuple(canon[o] for o in output_ids), pallas)
+
+
 def freed_intermediates(plan: ExecPlan) -> int:
     """Number of intermediate values the staged trace releases at their
     last use (graph outputs excepted) — the plan-level buffer-donation

@@ -59,6 +59,15 @@ class FusionContext:
         With a layout set, planning enumerates local × distributed
         placement per fused operator (hybrid plans) and execution on a
         real mesh runs distributed operators under ``shard_map``.
+    verify : str
+        Plan-verifier level at the stage boundaries
+        (:mod:`repro.core.verify`) — ``"cheap"`` (default: O(plan)
+        structural checks after ``Traced.plan()`` and before
+        ``Planned.compile()``), ``"strict"`` (additionally builds every
+        CPlan, replays placement/segment derivations, and checks the
+        whole-plan cache key — the ``fusionlint`` mode), or ``"off"``.
+        Error-severity diagnostics raise
+        :class:`~repro.core.verify.VerificationError`.
 
     A context is itself a context manager: ``with FusionContext(...):``
     scopes it onto a thread-local stack that :func:`current_context`
@@ -70,6 +79,7 @@ class FusionContext:
     staged: bool = True
     params: CostParams = field(default_factory=lambda: TPU_V5E)
     layout: Optional[Any] = None        # FusionLayout (kept Any: no jax dep)
+    verify: str = "cheap"               # "off" | "cheap" | "strict"
 
     def with_(self, **kw) -> "FusionContext":
         """Derived context with the given fields replaced."""
@@ -87,7 +97,7 @@ class FusionContext:
                 tuple(sorted(p.input_read_bw.items())),
                 p.dist.signature() if p.dist is not None else None)
         return (self.mode, self.pallas, self.staged, pkey,
-                layout_signature(self.layout))
+                layout_signature(self.layout), self.verify)
 
     # -- scoping ------------------------------------------------------------
     def __enter__(self) -> "FusionContext":
@@ -123,7 +133,8 @@ current_config = current_context
 @contextlib.contextmanager
 def fusion_mode(mode: Optional[str] = None, pallas: Optional[str] = None,
                 params: Optional[CostParams] = None, layout: Any = None,
-                staged: Optional[bool] = None):
+                staged: Optional[bool] = None,
+                verify: Optional[str] = None):
     """Sugar: scope a context derived from the current one."""
     kw = {}
     if mode is not None:
@@ -136,6 +147,8 @@ def fusion_mode(mode: Optional[str] = None, pallas: Optional[str] = None,
         kw["layout"] = layout
     if staged is not None:
         kw["staged"] = staged
+    if verify is not None:
+        kw["verify"] = verify
     ctx = current_context().with_(**kw)
     with ctx:
         yield ctx

@@ -16,10 +16,8 @@ plan cache (paper §2.1 "identifies equivalent CPlans via hashing").
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass, field
-from typing import Callable, Optional
-
-import numpy as np
+from dataclasses import dataclass
+from typing import Optional
 
 from .cost import FusedOpSpec
 from .ir import Graph, Node
@@ -172,6 +170,12 @@ def _variant_of(graph: Graph, ttype: TType, root: Node, cover: set[int]):
             return LEFT_MM, "sum", b.nid, a.nid
         return RIGHT_MM, "sum", a.nid, b.nid
     return NO_AGG, "", root.nid, None
+
+
+#: public accessor for the plan verifier and cost model — the
+#: (variant, agg_op, prog_root, close_operand_nid) classification is the
+#: single source of a fused operator's execution variant
+variant_of = _variant_of
 
 
 def _effective_inputs(graph: Graph, spec: FusedOpSpec,

@@ -19,7 +19,7 @@ opening heuristic, giving a good initial upper bound) and scans it with:
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence
 
 from .cost import (CostParams, mp_cost, partition_cost, static_lower_bound)

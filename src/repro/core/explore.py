@@ -18,12 +18,12 @@ layout is in scope.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from itertools import combinations
 
 from .ir import Graph, Node
 from .memo import MemoEntry, MemoTable
-from .templates import TEMPLATES, Status, Template, TType
+from .templates import TEMPLATES, Status, Template
 
 
 @dataclass

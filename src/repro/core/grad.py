@@ -206,7 +206,7 @@ def vjp_graph(graph: Graph) -> tuple[list[str], dict[str, Expr]]:
     for i, o in enumerate(graph.outputs):
         name = f"__ct{i}"
         cts.append(name)
-        ct = ir.matrix(name, o.shape)
+        ct = ir.matrix(name, o.shape, dtype=o.dtype)
         adjoint[o.nid] = adjoint[o.nid] + ct if o.nid in adjoint else ct
 
     for node in reversed(graph.nodes):

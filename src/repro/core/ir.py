@@ -159,6 +159,41 @@ def _broadcast_shape(a: tuple[int, int], b: tuple[int, int]) -> tuple[int, int]:
     return (r, c)
 
 
+def infer_shape(op: str, in_shapes: list[tuple[int, int]],
+                attrs: dict) -> Optional[tuple[int, int]]:
+    """Re-derive the output shape of ``op`` bottom-up from its input shapes
+    — the single source of the IR's shape semantics, shared by expression
+    construction invariants and the plan verifier's metadata cross-check
+    (:mod:`repro.core.verify`).  Returns None when the op carries no
+    derivable shape (leaves, ops with free output shape); raises
+    ``ValueError`` on inconsistent operand shapes (dimension mismatch)."""
+    if op in ("input", "lit", "diagv"):
+        return None
+    if op == "t":
+        (r, c), = in_shapes
+        return (c, r)
+    if op == "idx":
+        return (in_shapes[0][0], int(attrs["hi"]) - int(attrs["lo"]))
+    if op == "matmul":
+        a, b = in_shapes
+        m, k = (a[1], a[0]) if attrs.get("ta") else a
+        k2, n = (b[1], b[0]) if attrs.get("tb") else b
+        if k != k2:
+            raise ValueError(f"matmul contraction mismatch {a} @ {b}")
+        return (m, n)
+    if op in AGG_OPS and "axis" in attrs:
+        r, c = in_shapes[0]
+        return {"full": (1, 1), "row": (r, 1), "col": (1, c)}[attrs["axis"]]
+    if op in UNARY_OPS:
+        return in_shapes[0]
+    if op in BINARY_OPS or op in TERNARY_OPS:
+        out = in_shapes[0]
+        for s in in_shapes[1:]:
+            out = _broadcast_shape(out, s)
+        return out
+    return None
+
+
 def _unary_sparsity(op: str, s: float) -> float:
     return s if op in SPARSE_SAFE_UNARY else 1.0
 

@@ -21,11 +21,19 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from .ir import Graph, Node
+from .ir import Graph
 from .memo import MemoTable
 
 #: an interesting point is a data dependency (consumer_nid, input_nid)
 Point = tuple[int, int]
+
+
+class PlanInvariantError(Exception):
+    """A fusion plan violated a structural invariant the pipeline relies
+    on — an inconsistent placement/segment assignment, a binding that
+    cannot be wired, or (via :class:`repro.core.verify.VerificationError`)
+    any error-severity verifier diagnostic.  Raised instead of silently
+    producing a plan that would compute a wrong result."""
 
 
 @dataclass

@@ -17,19 +17,22 @@ their shared scans.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 from repro import hw as _hw
 from .cost import (CostParams, FusedOpSpec, Placement, TPU_V5E, node_bytes,
-                   partition_cost, resolve_partition, row_partitioned,
-                   spec_cost, spec_placement)
+                   resolve_partition, row_partitioned, spec_cost,
+                   spec_placement)
 from .enumerate import EnumStats, mp_skip_enum
 from .explore import ExploreStats, explore
 from .ir import Graph
 from .memo import MemoTable
-from .partitions import Partition, Point, build_partitions
+from .partitions import (Partition, PlanInvariantError, Point,
+                         build_partitions)
 from .templates import TType
+
+_EPILOGUES = ("none", "psum", "pmin", "pmax")
 
 MODES = ("gen", "fa", "fnr", "none")
 
@@ -77,6 +80,9 @@ class ExecPlan:
     #: contiguous distributed runs (see :class:`Segment`); empty when the
     #: plan was selected without distributed geometry
     segments: tuple = ()
+    #: cost parameters the plan was selected under — the verifier replays
+    #: placement/segment derivations and constraint checks against these
+    params: Optional[CostParams] = None
 
     def fused_specs(self) -> list:
         return [s for s in self.specs if getattr(s, "fused", False)]
@@ -150,7 +156,7 @@ def plan(graph: Graph, mode: str = "gen", params: CostParams = TPU_V5E,
     specs, cost = select(graph, memo, mode, params, enum_stats=en_st)
     segments = annotate_segments(graph, specs, params)
     return ExecPlan(graph, specs, cost, memo, en_st, ex_st,
-                    segments=segments)
+                    segments=segments, params=params)
 
 
 # -- assignment policies -----------------------------------------------------
@@ -171,21 +177,28 @@ def _assignment(graph: Graph, memo: MemoTable, part: Partition, mode: str,
 
 # -- local/distributed placement (hybrid plans) --------------------------------
 
-def _annotate_placements(graph: Graph, specs: list,
-                         params: CostParams) -> float:
-    """Pin the local-vs-distributed decision :func:`spec_cost` already
-    priced onto every fused operator, so codegen executes — and
-    ``explain()`` reports — exactly the costed arm.  Walks the plan in
+def resolved_placements(graph: Graph, specs: list, params: CostParams
+                        ) -> tuple[list, float]:
+    """The authoritative local-vs-distributed walk, as a pure function:
+    returns ``(placements, total cost)`` with one
+    :class:`~repro.core.cost.Placement` (or None, for basic operators)
+    per spec, **without** mutating the specs.  Walks the plan in
     dependency order threading the interior-producer state (a
     row-partitioned intermediate anchors its distributed consumers and
-    charges local ones the boundary gather), and returns the resulting
-    total plan cost.
+    charges local ones the boundary gather).
 
     A combined multi-aggregate distributes only when *every* member
     aggregate does (all sum-reduced partials ride one ``psum`` of the
     stacked (k, 1) output); a single local member keeps the whole
-    operator local rather than splitting one scan across arms."""
+    operator local rather than splitting one scan across arms.  Raises
+    :class:`~repro.core.partitions.PlanInvariantError` when the members'
+    distributed placements disagree on the row-shard group — one scan
+    cannot straddle two shard geometries.
+
+    Also the plan verifier's replay (`SEL014`): re-running this walk over
+    a plan's specs must reproduce the pinned placements exactly."""
     interior: dict[int, bool] = {}
+    placements: list = []
     total = 0.0
     for s in specs:
         if isinstance(s, MultiAggSpec):
@@ -194,11 +207,17 @@ def _annotate_placements(graph: Graph, specs: list,
             if pls and all(p.arm == "distributed" and p.epilogue == "psum"
                            for p in pls):
                 n = pls[0].n
+                if any((p.axes, p.n) != (pls[0].axes, n) for p in pls):
+                    raise PlanInvariantError(
+                        f"multi-aggregate %{s.root}: member placements "
+                        f"disagree on the row-shard group "
+                        f"{sorted({(p.axes, p.n) for p in pls})} — one "
+                        f"combined scan cannot straddle shard geometries")
                 out_b = len(s.roots) * params.dtype_bytes
                 gather = sum(p.gather_bytes for p in pls)
                 coll = gather + _hw.all_reduce_bytes(out_b, n)
                 sharded = frozenset().union(*(p.sharded for p in pls))
-                s.placement = Placement(
+                pl = Placement(
                     "distributed", sum(p.cost for p in pls),
                     sum(p.local_cost for p in pls),
                     sum(p.dist_cost for p in pls), "psum",
@@ -209,16 +228,32 @@ def _annotate_placements(graph: Graph, specs: list,
                 # is what explain() debugging needs to see
                 local = sum(p.local_cost for p in pls) if pls else 0.0
                 dist = sum(p.dist_cost for p in pls) if pls else math.inf
-                s.placement = Placement("local", local, local, dist)
-            total += s.placement.cost
+                pl = Placement("local", local, local, dist)
+            placements.append(pl)
+            total += pl.cost
             for r in s.roots:
                 interior[r] = False       # psum output is replicated
         elif getattr(s, "fused", False):
-            s.placement = spec_placement(graph, s, params, interior)
-            total += s.placement.cost
-            interior[s.root] = row_partitioned(s.placement)
+            pl = spec_placement(graph, s, params, interior)
+            placements.append(pl)
+            total += pl.cost
+            interior[s.root] = row_partitioned(pl)
         else:
+            placements.append(None)
             total += spec_cost(graph, s, params, interior)
+    return placements, total
+
+
+def _annotate_placements(graph: Graph, specs: list,
+                         params: CostParams) -> float:
+    """Pin the local-vs-distributed decision :func:`spec_cost` already
+    priced onto every fused operator, so codegen executes — and
+    ``explain()`` reports — exactly the costed arm.  Returns the
+    resulting total plan cost (see :func:`resolved_placements`)."""
+    placements, total = resolved_placements(graph, specs, params)
+    for s, pl in zip(specs, placements):
+        if pl is not None:
+            s.placement = pl
     return total
 
 
@@ -235,7 +270,13 @@ def annotate_segments(graph: Graph, specs: list,
     reduced value (replicated after its collective) must be read
     broadcast, and an external operand consumed by several run members
     must be sharded for all of them or none.  Violations split the run —
-    correctness over region length."""
+    correctness over region length.
+
+    Raises :class:`~repro.core.partitions.PlanInvariantError` when a
+    spec's placement is not even internally consistent — an unknown
+    collective epilogue, a sharded operand the spec does not bind, or two
+    specs producing the same value: splitting runs cannot repair those,
+    and lowering them would compute garbage."""
     if params.dist is None or params.dist.n <= 1:
         return ()
     segments: list[Segment] = []
@@ -243,6 +284,30 @@ def annotate_segments(graph: Graph, specs: list,
 
     def roots_of(s) -> tuple[int, ...]:
         return tuple(s.roots) if isinstance(s, MultiAggSpec) else (s.root,)
+
+    roots_seen: dict[int, int] = {}
+    for idx, s in enumerate(specs):
+        for r in roots_of(s):
+            if r in roots_seen:
+                raise PlanInvariantError(
+                    f"value %{r} is produced by both spec "
+                    f"[{roots_seen[r]}] and spec[{idx}] — segment "
+                    f"grouping needs a single producer per value")
+            roots_seen[r] = idx
+        pl = getattr(s, "placement", None)
+        if pl is None or pl.arm != "distributed":
+            continue
+        if pl.epilogue not in _EPILOGUES:
+            raise PlanInvariantError(
+                f"spec[{idx}] (root %{s.root}) has unknown collective "
+                f"epilogue {pl.epilogue!r}; expected one of "
+                f"{_EPILOGUES}")
+        extra = set(pl.sharded) - set(s.inputs)
+        if extra:
+            raise PlanInvariantError(
+                f"spec[{idx}] (root %{s.root}) placement marks "
+                f"{sorted(extra)} row-sharded but the spec does not "
+                f"bind them — placement and binding drifted apart")
 
     def compatible(idx: int) -> bool:
         s = specs[idx]

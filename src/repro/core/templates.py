@@ -19,10 +19,9 @@ U-row/V-row panel pair fits VMEM), replacing the paper's CPU blocksize B_c.
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass
 from typing import Optional
 
-from .ir import (AGG_OPS, CELL_OPS, Graph, Node, sparse_safe_wrt)
+from .ir import Graph, Node, sparse_safe_wrt
 
 # thresholds (TPU-motivated; see module docstring)
 NARROW_MAX = 256          # max cols of a Row-template matmul side operand

@@ -25,8 +25,6 @@ Both are registered JAX pytrees so they flow through jit/vmap/pjit.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -85,7 +83,8 @@ class BCSR:
         ridx, cidx = ridx[order], cidx[order]
         data = blocks[ridx, cidx]
         if len(ridx) == 0:                           # keep at least one block
-            ridx = np.array([0]); cidx = np.array([0])
+            ridx = np.array([0])
+            cidx = np.array([0])
             data = np.zeros((1, bs, bs), x.dtype)
         return BCSR(jnp.asarray(data), jnp.asarray(ridx, jnp.int32),
                     jnp.asarray(cidx, jnp.int32), (m, n), bs)
@@ -145,7 +144,9 @@ class DictCompressed:
             if len(v) > max_distinct:
                 raise ValueError(f"column {c}: {len(v)} distinct values")
             ndist = max(ndist, len(v))
-            vals_l.append(v); codes_l.append(code); counts_l.append(cnt)
+            vals_l.append(v)
+            codes_l.append(code)
+            counts_l.append(cnt)
         values = np.zeros((n, ndist), x.dtype)
         counts = np.zeros((n, ndist), np.float64)
         codes = np.stack(codes_l, axis=1).astype(np.int32)

@@ -13,8 +13,6 @@ along as (bm,1)/(1,bn) tiles; scalars as (1,1).
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

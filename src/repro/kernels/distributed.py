@@ -48,6 +48,7 @@ from typing import Callable, Optional
 import jax
 
 from repro.core.cplan import CPlan
+from repro.core.partitions import PlanInvariantError
 from . import ref
 
 #: structural cache of compiled shard_map operators — the distributed
@@ -101,9 +102,12 @@ def build_segment_fn(items: list[SegmentItem], mesh):
     sharded ``P(axes, None)`` for a ``"none"`` epilogue, replicated
     otherwise); ``epilogues`` lists the exported epilogues.  Returns None
     when the mesh cannot realize the placement (abstract mesh, axis
-    mismatch, indivisible external shard, or an operand both sharded and
-    broadcast across members — the caller then falls back to per-operator
-    execution)."""
+    mismatch, indivisible external shard — the caller then falls back to
+    per-operator execution); raises
+    :class:`~repro.core.partitions.PlanInvariantError` when the segment
+    itself is malformed (an operand both sharded and broadcast across
+    members), which :func:`repro.core.select.annotate_segments` never
+    emits."""
     try:
         from jax.sharding import Mesh, PartitionSpec as P
         from jax.experimental.shard_map import shard_map
@@ -129,7 +133,14 @@ def build_segment_fn(items: list[SegmentItem], mesh):
             sh = b.nid in it.placement.sharded
             if b.nid in ext_shard:
                 if ext_shard[b.nid] != sh:
-                    return None       # inconsistent view of one operand
+                    # annotate_segments only groups members with one
+                    # consistent view of each external operand, so
+                    # reaching this means the plan was corrupted after
+                    # selection — fail loudly, not fall back
+                    raise PlanInvariantError(
+                        f"segment operand %{b.nid} is row-sharded for "
+                        f"one member and broadcast for another — "
+                        f"inconsistent shard view inside one region")
                 continue
             if sh and b.shape[0] % n:
                 return None                        # defensive: plan drift

@@ -21,14 +21,13 @@ plan leaves a sparse op unfused.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.cplan import (CPlan, COL_AGG, COL_T_AGG, FULL_AGG, LEFT_MM,
-                              NO_AGG, RIGHT_MM, ROW_AGG)
+from repro.core.cplan import (CPlan, COL_AGG, FULL_AGG, LEFT_MM, NO_AGG,
+                              RIGHT_MM, ROW_AGG)
 from repro.core.templates import TType
 from . import ref
 from .blocksparse import BCSR, DictCompressed

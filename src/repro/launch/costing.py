@@ -268,7 +268,6 @@ def probe_cell(arch: str, shape_name: str, probe_mesh, *,
     G_full = cfg.n_layers / P
 
     if shape.kind == "train":
-        from repro.launch.mesh import dp_size
         from repro.launch import train as train_lib
         f = {}
         b = {}

@@ -9,7 +9,6 @@ Usage:
 """
 
 import argparse
-import json
 import sys
 import traceback
 

@@ -15,15 +15,13 @@ from pathlib import Path
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import SHAPES, get_config
-from repro.configs.base import ModelConfig, ShapeConfig
 from repro.dist import sharding as sh
 from repro.launch import serve as serve_lib
 from repro.launch import train as train_lib
-from repro.launch.mesh import dp_size, fsdp_axes
+from repro.launch.mesh import dp_size
 from repro.models import LM
 from repro.optim import adamw
 
@@ -86,7 +84,6 @@ def input_specs(arch: str, shape_name: str) -> dict:
     """ShapeDtypeStruct stand-ins for every model input of the cell."""
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
-    model = LM(cfg)
     if shape.kind == "train":
         return train_lib.train_batch_specs(cfg, shape)
     if shape.kind == "prefill":

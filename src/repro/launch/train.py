@@ -9,7 +9,6 @@ softmax-CE loss through the paper's planner (Row template) when
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Optional
 

@@ -12,12 +12,11 @@ multi-stream token ids.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig
 from . import attention as attn_mod
 from . import mamba as mamba_mod
 from . import xlstm as xlstm_mod

@@ -7,7 +7,6 @@ optimizer memory scales 1/N with the mesh — the ZeRO-3/FSDP layout.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ is fast; designed for the 'pod' axis.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,14 +9,18 @@ import repro.core as core
 PINNED_ALL = [
     "Compiled",
     "CostParams",
+    "Diagnostic",
     "Fused",
     "FusionContext",
     "FusionInputError",
     "FusionLayout",
     "NonDifferentiableError",
+    "PlanInvariantError",
     "Planned",
     "TPU_V5E",
     "Traced",
+    "VerificationError",
+    "VerifyReport",
     "current_config",
     "current_context",
     "fuse_exprs",
@@ -25,6 +29,7 @@ PINNED_ALL = [
     "ir",
     "plan",
     "plan_cache_stats",
+    "verify_plan",
     "whole_plan_cache_stats",
 ]
 

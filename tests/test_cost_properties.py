@@ -4,10 +4,6 @@ import math
 
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis "
-                    "(pip install repro[test])")
-from hypothesis import given, settings, strategies as st  # noqa: E402
-
 from repro.core import ir
 from repro.core.cost import (CostParams, TPU_V5E, mp_cost, node_bytes,
                              node_flops, partition_cost, spec_cost,
@@ -15,6 +11,10 @@ from repro.core.cost import (CostParams, TPU_V5E, mp_cost, node_bytes,
 from repro.core.explore import explore
 from repro.core.partitions import build_partitions
 from repro.core.select import plan
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install repro[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 
 def test_node_flops_matmul_and_cell():

@@ -6,7 +6,6 @@ and the code fails here before it fails in CI.
 """
 
 import importlib.util
-import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parents[1]

@@ -1,7 +1,6 @@
 """Dry-run machinery tests (small host-device mesh via subprocess for
 device-count isolation) + HLO parsing units."""
 
-import json
 import subprocess
 import sys
 import textwrap
@@ -73,7 +72,7 @@ def test_all_40_cells_accounted():
 
 
 def test_roofline_math():
-    from repro.launch.roofline import analyze, PEAK_FLOPS, HBM_BW, ICI_BW
+    from repro.launch.roofline import analyze, ICI_BW
     rec = {"arch": "yi-34b", "shape": "train_4k", "mesh": "x",
            "devices": 256,
            "flops_per_device": 1e15, "bytes_per_device": 1e12,

@@ -9,15 +9,15 @@ import math
 
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis "
-                    "(pip install repro[test])")
-from hypothesis import given, settings, strategies as st  # noqa: E402
-
 from repro.core import ir
 from repro.core.cost import TPU_V5E, partition_cost
 from repro.core.enumerate import EnumStats, find_cut_sets, mp_skip_enum
 from repro.core.explore import explore
 from repro.core.partitions import build_partitions
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install repro[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 
 def brute_force(graph, memo, part, params=TPU_V5E):

@@ -1,7 +1,5 @@
 """OFMC candidate exploration (Algorithm 1) invariants on paper examples."""
 
-import pytest
-
 from repro.core import ir
 from repro.core.explore import ExploreStats, explore
 from repro.core.templates import Status, TType

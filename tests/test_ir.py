@@ -1,6 +1,5 @@
 """IR construction: shapes, broadcasting, CSE, sparsity propagation."""
 
-import numpy as np
 import pytest
 
 from repro.core import ir

@@ -1,7 +1,6 @@
 """Per-kernel validation: Pallas skeletons (interpret mode) vs the ref.py
 pure-jnp oracle, swept over shapes, dtypes, variants and programs."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

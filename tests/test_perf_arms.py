@@ -71,7 +71,9 @@ def test_moe_impls_match_dense(impl):
 def test_moe_a2a_matches_dense_sharded():
     """shard_map all_to_all EP dispatch ≡ dense-masked (subprocess for an
     8-device mesh)."""
-    import subprocess, sys, textwrap
+    import subprocess
+    import sys
+    import textwrap
     from pathlib import Path
     code = textwrap.dedent("""\
         import os

@@ -6,7 +6,6 @@ import threading
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import fused, fusion_mode, plan_cache_stats
 from repro.core.codegen import PLAN_CACHE, PlanCache

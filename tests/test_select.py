@@ -1,11 +1,6 @@
 """Candidate selection: partitions, interesting points, plan quality."""
 
-import math
-
-import pytest
-
 from repro.core import ir
-from repro.core.cost import TPU_V5E, partition_cost
 from repro.core.explore import explore
 from repro.core.partitions import build_partitions
 from repro.core.select import MultiAggSpec, plan

@@ -34,7 +34,6 @@ def test_engine_matches_direct_decode(setup):
     toks = jnp.asarray(prompt, jnp.int32)[None]
     logits, cache, _ = model.apply(params, toks, caches=cache)
     out = []
-    cur = int(jnp.argmax(logits[0, -1]))
     pos = len(prompt)
     # engine feeds the prompt's last token first, so replicate that
     cur_tok = int(prompt[-1])

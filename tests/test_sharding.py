@@ -3,11 +3,10 @@ divisibility-checked) for every architecture on both production mesh
 shapes — checked abstractly (no device allocation, no compile)."""
 
 import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import ARCH_IDS, SHAPES, all_configs, applicable, get_config
+from repro.configs import ARCH_IDS, SHAPES, applicable, get_config
 from repro.dist import sharding as sh
 from repro.launch.serve import cache_specs_abstract
 from repro.models import LM

@@ -1,21 +1,18 @@
 """Substrate tests: data determinism, checkpoint atomicity + elastic
 restore, fault-tolerant loop behavior, gradient compression, optimizer."""
 
-import os
-import threading
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import CheckpointStore
 from repro.data import DataConfig, ShardedLoader, TokenSource
 from repro.optim import adamw
-from repro.optim.compression import (CompressionConfig, apply_tree,
-                                     compress_decompress, init_residuals)
-from repro.train import LoopConfig, resume, run_loop
+from repro.optim.compression import (CompressionConfig,
+                                     compress_decompress)
+from repro.train import LoopConfig, run_loop
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,284 @@
+"""Plan-verifier tests: clean plans verify clean, corrupted plans are
+caught with the right diagnostic code, and the verifier is wired into the
+stage boundaries.
+
+Three layers:
+
+* **property** — every plan the selector emits for random small DAGs (all
+  four modes) passes strict verification; hypothesis-driven when
+  available, with a seeded fallback sweep that always runs;
+* **goldens** — every pinned algorithm region (the ``fusionlint``
+  registry) verifies clean in strict mode;
+* **corruption** — deliberately broken plans (freed-intermediate read,
+  non-zero-preserving sparse-exploit driver, segment epilogue mismatch,
+  drifted IR metadata) produce error-severity diagnostics with the
+  documented codes, and the typed :class:`PlanInvariantError` raises
+  replace the old silent fallbacks.
+"""
+
+import importlib.util
+import random
+from dataclasses import replace
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (PlanInvariantError, VerificationError, fusion_mode,
+                        ir, verify_plan)
+from repro.core.cost import CostParams, DistParams, TPU_V5E
+from repro.core.select import MODES, annotate_segments, plan as plan_graph
+from repro.core.verify import verify_exec, verify_graph, verify_selection
+from repro.dist import LogicalMesh
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _arr(*shape):
+    return np.zeros(shape, np.float32)
+
+
+def _codes(diags):
+    return {d.code for d in diags if d.severity == "error"}
+
+
+# --------------------------------------------------------------------------
+# property: selector output always verifies strict-clean
+# --------------------------------------------------------------------------
+
+def _random_graph(seed: int) -> ir.Graph:
+    """A seeded random small HOP DAG over compatible shapes."""
+    rng = random.Random(seed)
+    m, k, n = rng.choice([(8, 4, 3), (12, 6, 2), (6, 3, 5)])
+    X = ir.matrix("X", (m, k), sparsity=rng.choice([1.0, 1.0, 0.05]))
+    W = ir.matrix("W", (k, n))
+    y = ir.matrix("y", (m, 1))
+    pool = [X, W, y, X @ W]
+    for _ in range(rng.randint(2, 6)):
+        a = rng.choice(pool)
+        roll = rng.random()
+        if roll < 0.3:
+            e = rng.choice([ir.relu, ir.exp, ir.sigmoid])(a)
+        elif roll < 0.55:
+            b = rng.choice([p for p in pool if p.shape == a.shape])
+            e = rng.choice([a + b, a * b, a - b])
+        elif roll < 0.7:
+            e = a * rng.choice([2.0, 0.5]) + 1.0
+        elif roll < 0.85:
+            mates = [p for p in pool if p.shape[0] == a.shape[1]]
+            e = (a @ rng.choice(mates)) if mates else a.T
+        else:
+            e = rng.choice([a.sum(), a.rowsums()])
+        pool.append(e)
+    outs = [p for p in pool[3:] if rng.random() < 0.5] or [pool[-1]]
+    return ir.Graph.build(outs)
+
+
+def _assert_all_modes_verify(seed: int) -> None:
+    graph = _random_graph(seed)
+    for mode in MODES:
+        eplan = plan_graph(graph, mode, TPU_V5E)
+        report = verify_plan(eplan, level="strict")
+        assert not report.errors, (
+            f"seed {seed} mode {mode}:\n{report.pretty()}")
+
+
+def test_random_plans_verify_strict_seeded():
+    """Fallback sweep (no hypothesis needed): 12 seeded random DAGs ×
+    all four selection modes all verify strict-clean."""
+    for seed in range(12):
+        _assert_all_modes_verify(seed)
+
+
+def test_random_plans_verify_strict_hypothesis():
+    pytest.importorskip("hypothesis", reason="property tests need "
+                        "hypothesis (pip install repro[test])")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 100_000))
+    def prop(seed):
+        _assert_all_modes_verify(seed)
+
+    prop()
+
+
+# --------------------------------------------------------------------------
+# goldens: every pinned algorithm region verifies clean (fusionlint)
+# --------------------------------------------------------------------------
+
+def _load_fusionlint():
+    spec = importlib.util.spec_from_file_location(
+        "fusionlint", REPO / "tools" / "fusionlint.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_golden_algo_plans_verify_strict():
+    """The fusionlint registry regions (the plans the goldens pin) all
+    verify strict-clean in gen mode, locally and under a mesh.  CI runs
+    the full CLI over every mode; this keeps a fast in-suite gate."""
+    fusionlint = _load_fusionlint()
+    assert fusionlint.lint(["l2svm", "kmeans", "als_cg"], ["gen"],
+                           "strict", verbose=False) == 0
+
+
+def test_fusionlint_cli_smoke():
+    fusionlint = _load_fusionlint()
+    assert fusionlint.main(["--algo", "kmeans", "--mode", "gen",
+                            "--strict"]) == 0
+
+
+# --------------------------------------------------------------------------
+# corruption: broken plans produce the documented diagnostics
+# --------------------------------------------------------------------------
+
+def _small_plan(mode="gen"):
+    X = ir.matrix("X", (8, 4))
+    w = ir.matrix("w", (4, 1))
+    graph = ir.Graph.build([ir.relu(X @ w).sum()])
+    return plan_graph(graph, mode, TPU_V5E)
+
+
+def test_freed_intermediate_read_is_exe001():
+    """Liveness corruption: freeing a value at its producer while a later
+    operator still reads it must be flagged EXE001."""
+    eplan = _small_plan(mode="none")       # every op basic: mm, relu, sum
+    mm = next(n.nid for n in eplan.graph.nodes if n.op == "matmul")
+    consumer = next(i for i, s in enumerate(eplan.specs)
+                    if mm in s.inputs)
+    producer = next(i for i, s in enumerate(eplan.specs) if s.root == mm)
+    assert producer < consumer
+    diags = verify_exec(eplan, last_uses={producer: [mm]})
+    assert "EXE001" in _codes(diags)
+
+
+def test_liveness_of_executed_plan_is_sound():
+    """The map codegen actually executes never trips EXE001/EXE002."""
+    eplan = _small_plan(mode="none")
+    assert not _codes(verify_exec(eplan))
+
+
+def test_unsafe_sparse_driver_is_sel004():
+    """relu(1 − y⊙(Xw)) is NOT zero-preserving w.r.t. X (a zero row of X
+    still yields relu(1) = 1), so exploiting X's sparsity would evaluate
+    only the non-zeros and be numerically wrong."""
+    from repro.algos import l2svm
+    with fusion_mode("gen", verify="off"):
+        eplan = l2svm._hinge.plan_for(X=_arr(10_000, 100),
+                                      w=_arr(100, 1), y=_arr(10_000, 1))
+    spec = eplan.fused_specs()[0]
+    x_nid = next(n.nid for n in eplan.graph.nodes if n.name == "X")
+    assert x_nid in spec.inputs
+    spec.driver = x_nid                    # corrupt: unsafe exploitation
+    diags = verify_selection(eplan)
+    assert "SEL004" in _codes(diags)
+
+
+def test_mismatched_segment_epilogue_is_sel011():
+    """A distributed full-aggregate whose placement claims a "none"
+    epilogue contradicts the template registry (full_agg completes with
+    psum) — flagged SEL011."""
+    from repro.algos import l2svm
+    with fusion_mode("gen", layout=LogicalMesh({"data": 4}),
+                     verify="off"):
+        p = l2svm._objective.trace(out=_arr(10_000, 1),
+                                   w=_arr(100, 1)).plan()
+    eplan = p.eplan
+    assert eplan.segments, "fixture drift: expected a plan segment"
+    idx = eplan.segments[0].indices[0]
+    pl = eplan.specs[idx].placement
+    assert pl.epilogue == "psum"
+    eplan.specs[idx].placement = replace(pl, epilogue="none")
+    diags = verify_selection(eplan)
+    assert "SEL011" in _codes(diags)
+
+
+def test_corrupt_ir_shape_metadata_is_ir003():
+    X = ir.matrix("X", (8, 4))
+    w = ir.matrix("w", (4, 1))
+    graph = ir.Graph.build([ir.relu(X @ w).sum()])
+    mm = next(n for n in graph.nodes if n.op == "matmul")
+    mm.shape = (999, 1)                    # drift stored metadata
+    assert "IR003" in _codes(verify_graph(graph))
+
+
+def test_error_report_raises_verification_error():
+    eplan = _small_plan(mode="none")
+    mm = next(n.nid for n in eplan.graph.nodes if n.op == "matmul")
+    producer = next(i for i, s in enumerate(eplan.specs) if s.root == mm)
+    report = verify_plan(eplan, level="cheap")
+    report.diagnostics.extend(
+        verify_exec(eplan, last_uses={producer: [mm]}))
+    with pytest.raises(VerificationError) as exc:
+        report.raise_if_errors()
+    assert "EXE001" in str(exc.value)
+    assert isinstance(exc.value, PlanInvariantError)
+
+
+def test_annotate_segments_raises_on_drifted_placement():
+    """Satellite: a placement whose sharded set names a value the spec
+    does not bind is a typed PlanInvariantError, not a silent segment."""
+    from repro.algos import l2svm
+    with fusion_mode("gen", layout=LogicalMesh({"data": 4}),
+                     verify="off"):
+        p = l2svm._objective.trace(out=_arr(10_000, 1),
+                                   w=_arr(100, 1)).plan()
+    eplan = p.eplan
+    idx = eplan.segments[0].indices[0]
+    pl = eplan.specs[idx].placement
+    eplan.specs[idx].placement = replace(
+        pl, sharded=frozenset(pl.sharded | {99_999}))
+    params = CostParams(dist=DistParams(axes=("data",), n=4))
+    with pytest.raises(PlanInvariantError):
+        annotate_segments(eplan.graph, eplan.specs, params)
+
+
+def test_annotate_segments_raises_on_bad_epilogue_token():
+    from repro.algos import l2svm
+    with fusion_mode("gen", layout=LogicalMesh({"data": 4}),
+                     verify="off"):
+        p = l2svm._objective.trace(out=_arr(10_000, 1),
+                                   w=_arr(100, 1)).plan()
+    eplan = p.eplan
+    idx = eplan.segments[0].indices[0]
+    pl = eplan.specs[idx].placement
+    eplan.specs[idx].placement = replace(pl, epilogue="allreduce")
+    params = CostParams(dist=DistParams(axes=("data",), n=4))
+    with pytest.raises(PlanInvariantError):
+        annotate_segments(eplan.graph, eplan.specs, params)
+
+
+# --------------------------------------------------------------------------
+# stage-boundary wiring
+# --------------------------------------------------------------------------
+
+def test_strict_context_verifies_and_reports():
+    from repro.algos import l2svm
+    with fusion_mode("gen", verify="strict"):
+        p = l2svm._hinge.trace(X=_arr(1_000, 20), w=_arr(20, 1),
+                               y=_arr(1_000, 1)).plan()
+    assert p._verify is not None and p._verify.level == "strict"
+    section = p.explain()["verify"]
+    assert section["level"] == "strict"
+    assert section["errors"] == 0
+    p.compile()                            # exec re-check passes too
+
+
+def test_verify_off_skips_and_explain_reports_none():
+    from repro.algos import l2svm
+    with fusion_mode("gen", verify="off"):
+        p = l2svm._hinge.trace(X=_arr(1_000, 20), w=_arr(20, 1),
+                               y=_arr(1_000, 1)).plan()
+    assert p._verify is None
+    assert p.explain()["verify"] is None
+
+
+def test_default_context_runs_cheap_verify():
+    from repro.algos import l2svm
+    with fusion_mode("gen"):
+        p = l2svm._hinge.trace(X=_arr(1_000, 20), w=_arr(20, 1),
+                               y=_arr(1_000, 1)).plan()
+    assert p._verify is not None and p._verify.level == "cheap"
+    assert p._verify.ok
