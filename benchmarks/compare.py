@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""Compare two BENCH_fusion.json artifacts and gate on regressions.
+
+Usage::
+
+    python benchmarks/compare.py BASELINE CURRENT \\
+        [--threshold 1.3] [--gate 'dispatch_chain*_whole_plan']
+
+Both files are ``repro-bench-v1`` artifacts (``benchmarks.run --json``).
+Every row shared by both files is printed with its current/baseline
+ratio; rows whose name matches the ``--gate`` glob (default: the
+dispatch-overhead whole-plan medians — the staged backend's headline
+number) additionally *gate* the run: any gated row slower than
+``threshold ×`` its baseline, or missing from the current artifact,
+exits nonzero.  CI runs this against the committed seed so a PR cannot
+silently regress whole-plan dispatch overhead.
+
+Absolute microbench timings move with the host, so the default gate is
+deliberately loose (1.3×) and only guards order-of-magnitude claims —
+the per-commit artifact diff, not this gate, is the fine-grained record.
+"""
+
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import sys
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != "repro-bench-v1":
+        sys.exit(f"compare: {path} is not a repro-bench-v1 artifact")
+    return {r["name"]: r for r in doc["rows"]}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="bench-compare")
+    ap.add_argument("baseline", help="committed seed artifact")
+    ap.add_argument("current", help="freshly measured artifact")
+    ap.add_argument("--threshold", type=float, default=1.3,
+                    help="fail when a gated row's us_per_call exceeds "
+                         "threshold x baseline (default: 1.3)")
+    ap.add_argument("--gate", default="dispatch_chain*_whole_plan",
+                    help="glob of row names that gate the run "
+                         "(default: dispatch-overhead whole-plan rows)")
+    args = ap.parse_args(argv)
+
+    base = load_rows(args.baseline)
+    cur = load_rows(args.current)
+
+    failures: list[str] = []
+    shared = sorted(set(base) & set(cur))
+    print(f"{'name':42s} {'base us':>10s} {'cur us':>10s} {'ratio':>7s}")
+    for name in shared:
+        b, c = base[name]["us_per_call"], cur[name]["us_per_call"]
+        ratio = c / b if b > 0 else float("inf")
+        gated = fnmatch.fnmatch(name, args.gate)
+        flag = ""
+        if gated and ratio > args.threshold:
+            flag = f"  REGRESSION (> {args.threshold}x)"
+            failures.append(f"{name}: {b:.1f} -> {c:.1f} us "
+                            f"({ratio:.2f}x)")
+        elif gated:
+            flag = "  [gate]"
+        print(f"{name:42s} {b:10.1f} {c:10.1f} {ratio:7.2f}{flag}")
+
+    for name in sorted(base):
+        if fnmatch.fnmatch(name, args.gate) and name not in cur:
+            failures.append(f"{name}: present in baseline, missing from "
+                            "current artifact")
+    if not any(fnmatch.fnmatch(n, args.gate) for n in base):
+        failures.append(f"no baseline row matches gate {args.gate!r} — "
+                        "regenerate the seed artifact")
+
+    if failures:
+        print("\nbench-compare: FAIL")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    n_gated = sum(1 for n in shared if fnmatch.fnmatch(n, args.gate))
+    print(f"\nbench-compare: OK — {n_gated} gated row(s) within "
+          f"{args.threshold}x of the seed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

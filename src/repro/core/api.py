@@ -50,7 +50,8 @@ import jax.numpy as jnp
 
 from repro.kernels.blocksparse import BCSR, DictCompressed
 from . import ir
-from .codegen import CompiledPlan, compile_plan, freed_intermediates
+from .codegen import (CompiledPlan, compile_plan, freed_intermediates,
+                      plan_fallbacks)
 from .context import FusionContext, current_context
 from .cost import CostParams
 from .grad import vjp_graph
@@ -219,7 +220,8 @@ def _verified_planned(traced: Traced, ctx: FusionContext,
     here — before any code generation can execute the broken plan."""
     planned = Planned(traced, ctx, eplan)
     if ctx.verify != "off":
-        report = verify_plan(eplan, level=ctx.verify, pallas=ctx.pallas)
+        report = verify_plan(eplan, level=ctx.verify, pallas=ctx.pallas,
+                             layout=ctx.layout)
         report.raise_if_errors()
         planned._verify = report
     return planned
@@ -362,13 +364,21 @@ class Planned:
                 else len(self.eplan.specs),
                 "donated_inputs": [],       # inputs are never donated
                 "freed_intermediates": freed_intermediates(self.eplan),
+                # every statically-known execution downgrade, with its
+                # reason; Compiled.explain() merges the runtime-recorded
+                # entries (value-format downgrades seen at call time)
+                "fallbacks": plan_fallbacks(
+                    self.eplan, layout=self.context.layout,
+                    pallas=self.context.pallas,
+                    staged=self.context.staged),
             },
             "layout": None,
         }
         if self._verify is None and self.context.verify != "off":
             self._verify = verify_plan(self.eplan,
                                        level=self.context.verify,
-                                       pallas=self.context.pallas)
+                                       pallas=self.context.pallas,
+                                       layout=self.context.layout)
         report["verify"] = (self._verify.summary()
                            if self._verify is not None else None)
         if self.context.layout is not None:
@@ -444,7 +454,7 @@ class Planned:
             report = VerifyReport(level=ctx.verify)
             report.diagnostics.extend(verify_exec(
                 self.eplan, strict=ctx.verify == "strict",
-                pallas=ctx.pallas))
+                pallas=ctx.pallas, layout=ctx.layout))
             report.raise_if_errors()
         return Compiled(replace(self, context=ctx))
 
@@ -462,10 +472,9 @@ class Compiled:
         self.planned = planned
         ctx = planned.context
         self.staged = ctx.staged
-        self._cplan: CompiledPlan = compile_plan(planned.eplan,
-                                                 pallas=ctx.pallas,
-                                                 layout=ctx.layout,
-                                                 staged=ctx.staged)
+        self._cplan: CompiledPlan = compile_plan(
+            planned.eplan, pallas=ctx.pallas, layout=ctx.layout,
+            staged=ctx.staged, strict=ctx.verify == "strict")
         self._n_outs = len(planned.eplan.graph.outputs)
         self._vjp_fn = None
         self._bwd_compiled: Optional[CompiledPlan] = None
@@ -526,7 +535,21 @@ class Compiled:
 
     # -- calling ------------------------------------------------------------
     def explain(self, include_backward: bool = False) -> dict:
-        return self.planned.explain(include_backward=include_backward)
+        report = self.planned.explain(include_backward=include_backward)
+        # merge runtime-recorded downgrades (value-format decisions made
+        # at call time) with the static ones, deduped by site+reason
+        static = report["execution"]["fallbacks"]
+        seen = {(f["site"], f["reason"]) for f in static}
+        for f in self._cplan.fallbacks:
+            if (f["site"], f["reason"]) not in seen:
+                static.append(dict(f))
+        bwd = self._bwd_compiled
+        if bwd is not None:
+            seen = {(f["site"], f["reason"]) for f in static}
+            for f in bwd.fallbacks:
+                if (f["site"], f["reason"]) not in seen:
+                    static.append(dict(f))
+        return report
 
     def _bind(self, args, kwargs) -> dict:
         bound = dict(zip(self.planned.traced.in_names, args))

@@ -12,17 +12,26 @@ callables.  Two cache layers memoize the generated code:
   once — by structural plan signature, so structurally-equal plans share
   one XLA executable.
 
-Staged execution is the default: one dispatch per plan call, literals
-folded as trace constants, dead intermediates released via ``_last_uses``
-(XLA then reuses their buffers — plan-level buffer donation), and runs of
-adjacent distributed operators lowered into a single ``shard_map`` region
-(:mod:`repro.kernels.distributed`).  ``compile_plan(staged=False)`` keeps
-the per-operator interpreter dispatch as a debug/fallback path; sparse
-operands and ``pallas="interpret"`` fall back automatically.
+Staged execution is the default for **every** operand format and Pallas
+mode — dense, BCSR, CLA-compressed, ``pallas="interpret"`` — one
+dispatch per plan call, literals folded as trace constants, dead
+intermediates released via ``_last_uses`` (XLA then reuses their
+buffers — plan-level buffer donation), and runs of adjacent distributed
+operators lowered into a single ``shard_map`` region whose body runs the
+generated kernels over shard-local shapes
+(:mod:`repro.kernels.distributed`).  Only ``compile_plan(staged=False)``
+selects the per-operator interpreter dispatch, kept as an explicit debug
+path.  Any remaining downgrade (e.g. a sparse operand whose block rows
+do not partition across the mesh) is *recorded*, never silent: the
+reasons surface in ``explain()['execution']['fallbacks']``, are checked
+by the EXE005 verifier invariant and by ``fusionlint --strict``, and
+raise under ``FusionContext(verify="strict")`` when a costed distributed
+placement is abandoned at execution time.
 
 Execution paths per operator are chosen by the dispatcher in
 ``kernels/ops.py`` (dense XLA, dense Pallas, BCSR sparsity-exploiting,
-CLA-compressed).
+CLA-compressed); the full kernel-dispatch decision table lives in
+``docs/architecture.md``.
 """
 
 from __future__ import annotations
@@ -37,11 +46,33 @@ import jax.numpy as jnp
 
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
-from repro.kernels.blocksparse import BCSR, DictCompressed
+from repro.kernels.blocksparse import (BCSR, DictCompressed, ShardedBCSR)
 from .cost import FusedOpSpec
-from .cplan import CPlan, build_cplan
+from .cplan import CPlan, NO_AGG, build_cplan
 from .ir import Graph, Node
+from .partitions import PlanInvariantError
 from .select import ExecPlan, MultiAggSpec
+
+
+def _mesh_of(layout):
+    """Mesh carried by a layout-ish object: a FusionLayout (``.mesh``),
+    a bare mesh passed directly (``.axis_names``), or None."""
+    if layout is None:
+        return None
+    mesh = getattr(layout, "mesh", None)
+    if mesh is None and hasattr(layout, "axis_names"):
+        return layout
+    return mesh
+
+
+def _is_real_mesh(mesh) -> bool:
+    """True for an executable jax Mesh (vs an abstract LogicalMesh used
+    for cost-only planning, or None)."""
+    try:
+        from jax.sharding import Mesh
+    except ImportError:                            # pragma: no cover
+        return False
+    return isinstance(mesh, Mesh)
 
 
 # --------------------------------------------------------------------------
@@ -210,15 +241,9 @@ class GeneratedOp:
     _jits: dict = field(default_factory=dict)
 
     def _run(self, env: dict[int, object], pallas: str):
-        cp = self.cplan
-        main = env.get(cp.main.nid)
-        from repro.core.templates import TType
-        if isinstance(main, BCSR) and cp.ttype == TType.OUTER \
-                and pallas != "never" and cp.variant in ("right_mm",
-                                                         "full_agg"):
-            from repro.kernels.outerprod import outer_pallas
-            return outer_pallas(cp, env, interpret=pallas == "interpret")
-        return kops.execute(cp, env, pallas=pallas)
+        # format routing (incl. BCSR+Outer → outer_pallas) lives in the
+        # kops.execute dispatcher, shared with the staged path
+        return kops.execute(self.cplan, env, pallas=pallas)
 
     def __call__(self, env: dict[int, object], pallas: str = "never"):
         if pallas == "interpret":
@@ -236,6 +261,9 @@ def _eval_basic(graph: Graph, node: Node, env: dict[int, object]):
     ins = [env[i.nid] if i.op != "lit" else
            jnp.asarray(float(i.attrs["value"]), jnp.float32).reshape(1, 1)
            for i in node.inputs]
+    # an input partitioned for a shard_map segment but also consumed
+    # here re-assembles to its global block list (exact: zero padding)
+    ins = [v.unshard() if isinstance(v, ShardedBCSR) else v for v in ins]
     if node.is_matmul and isinstance(ins[0], BCSR):
         b = ins[1]
         b = b.todense() if hasattr(b, "todense") else b
@@ -261,6 +289,29 @@ def _spec_roots(spec) -> tuple[int, ...]:
         else (spec.root,)
 
 
+def _segment_items(graph: Graph, plan: ExecPlan, seg,
+                   cache: PlanCache) -> list:
+    """SegmentItems for one plan Segment — shared by the staged lowering
+    and the static fallback report so the two can never drift."""
+    from repro.kernels.distributed import SegmentItem
+    specs = plan.specs
+    output_ids = set(graph.output_ids)
+    cons: dict[int, set[int]] = {}
+    for j, s in enumerate(specs):
+        for i in s.inputs:
+            cons.setdefault(i, set()).add(j)
+    seg_set = set(seg.indices)
+    items = []
+    for j in seg.indices:
+        spec = specs[j]
+        _op, cplan = cache.get_or_build(graph, spec)
+        roots = _spec_roots(spec)
+        export = any(r in output_ids or (cons.get(r, set()) - seg_set)
+                     for r in roots)
+        items.append(SegmentItem(cplan, spec.placement, roots, export))
+    return items
+
+
 @dataclass
 class CompiledPlan:
     """Executable form of an ExecPlan.
@@ -277,10 +328,10 @@ class CompiledPlan:
     functions are shared across structurally-equal plans via the
     :class:`WholePlanCache`.
 
-    **Per-operator fallback** (``staged=False``, sparse operands, or
-    ``pallas="interpret"``): run specs in dependency order, one dispatch
-    per fused operator, freeing intermediates when their last consumer
-    has run — the pre-staging interpreter, kept as the debug path.
+    **Per-operator path** (``staged=False`` only — an explicit debug
+    request, never an automatic downgrade): run specs in dependency
+    order, one dispatch per fused operator, freeing intermediates when
+    their last consumer has run — the pre-staging interpreter.
 
     When the plan was selected under a mesh layout, fused operators whose
     placement is ``"distributed"`` execute their generated body inside
@@ -288,10 +339,15 @@ class CompiledPlan:
     collective epilogue (:mod:`repro.kernels.distributed`); the staged
     path lowers each plan :class:`~repro.core.select.Segment` — a run of
     adjacent distributed operators — into a *single* ``shard_map`` region
-    whose row-sharded intermediates flow shard-to-shard.  Everything
-    else — and every operator when the mesh is abstract or an operand is
-    sparse — runs the local generated operator.  One plan, hybrid
-    execution."""
+    whose row-sharded intermediates flow shard-to-shard and whose body
+    runs the Pallas template kernels over shard-local shapes when
+    ``pallas`` is enabled.  Row-sharded BCSR operands are block-row-
+    partitioned outside ``jit`` (:class:`~repro.kernels.blocksparse.
+    ShardedBCSR`) so sparse mains execute inside the region too.  Every
+    downgrade to local execution is recorded in :attr:`fallbacks` with
+    its reason — surfaced via ``explain()['execution']['fallbacks']``
+    and raised under ``verify="strict"`` when a costed placement on a
+    *real* mesh is abandoned.  One plan, hybrid execution."""
     plan: ExecPlan
     pallas: str = "never"
     cache: PlanCache = field(default_factory=lambda: PLAN_CACHE)
@@ -299,6 +355,9 @@ class CompiledPlan:
     layout: Optional[object] = None
     #: whole-plan staged execution (False: per-operator debug dispatch)
     staged: bool = True
+    #: raise when a costed distributed placement is abandoned at
+    #: execution time on a real mesh (FusionContext(verify="strict"))
+    strict: bool = False
     #: per-(spec index, mesh) compiled shard_map callables for the per-op
     #: path (False: not realizable) — keyed by the mesh so a plan
     #: re-targeted at a different real mesh can't reuse a stale executable
@@ -308,6 +367,36 @@ class CompiledPlan:
     #: jitted whole-plan function + its un-jitted trace (introspection)
     _staged_fn: Optional[Callable] = field(default=None, repr=False)
     _staged_raw: Optional[Callable] = field(default=None, repr=False)
+    #: mesh-validated SegmentPlans of the staged lowering (real mesh)
+    _seg_plans: list = field(default_factory=list, repr=False)
+    #: recorded execution downgrades, deduped by (site, reason, specs)
+    _fallbacks: dict = field(default_factory=dict, repr=False)
+    #: BCSR partition memo: (nid, nparts, id(data)) -> (data, ShardedBCSR)
+    _part_cache: dict = field(default_factory=dict, repr=False)
+
+    # -- fallback observability --------------------------------------------
+
+    def record_fallback(self, site: str, reason: str,
+                        specs: Optional[tuple] = None,
+                        hard: bool = False) -> None:
+        """Log one execution downgrade (idempotent per site/reason/specs).
+        ``hard`` marks a placement a *real* mesh could have executed —
+        under ``strict`` that abandonment raises instead of downgrading."""
+        key = (site, reason, specs)
+        if key not in self._fallbacks:
+            entry = {"site": site, "reason": reason}
+            if specs is not None:
+                entry["specs"] = list(specs)
+            self._fallbacks[key] = entry
+        if hard and self.strict:
+            raise PlanInvariantError(
+                f"verify=strict: costed distributed placement abandoned "
+                f"at execution time ({site}): {reason}")
+
+    @property
+    def fallbacks(self) -> list:
+        """Recorded execution downgrades (see ``explain()``)."""
+        return list(self._fallbacks.values())
 
     # -- staged whole-plan path --------------------------------------------
 
@@ -323,7 +412,9 @@ class CompiledPlan:
 
     def _build_staged(self) -> tuple[Callable, Callable]:
         import jax
-        from repro.kernels.distributed import SegmentItem, build_segment_fn
+        from repro.kernels.distributed import (
+            SegmentFallback, SegmentItem, lower_segment, plan_segment,
+            run_segment_local)
 
         t0 = time.perf_counter()
         graph, plan = self.plan.graph, self.plan
@@ -332,13 +423,8 @@ class CompiledPlan:
         lits = tuple((n.nid, float(n.attrs["value"]))
                      for n in graph.nodes if n.op == "lit")
         output_ids = tuple(o.nid for o in graph.outputs)
-        mesh = getattr(self.layout, "mesh", None)
-
-        # consumers per node (for segment exports)
-        cons: dict[int, set[int]] = {}
-        for j, s in enumerate(specs):
-            for i in s.inputs:
-                cons.setdefault(i, set()).add(j)
+        mesh = _mesh_of(self.layout)
+        real_mesh = _is_real_mesh(mesh)
 
         # canonical env tokens: whole-plan keys must capture the wiring,
         # not the node ids (structurally-equal plans from other traces
@@ -351,6 +437,7 @@ class CompiledPlan:
         steps: list[tuple] = []          # executable steps
         key_parts: list[tuple] = []      # structural key, one per step
         spec_step: dict[int, int] = {}   # spec idx -> step idx
+        self._seg_plans = []
 
         def _token(roots: tuple[int, ...], step_idx: int,
                    item_idx: int = 0) -> None:
@@ -361,36 +448,34 @@ class CompiledPlan:
             for k, r in enumerate(roots):
                 canon[r] = ("s", step_idx, item_idx, k)
 
+        def _seg_key(items, sp):
+            return ("seg", mesh,
+                    tuple((it.cplan.cache_key(), it.placement.epilogue,
+                           tuple(b.nid in it.placement.sharded
+                                 for b in it.cplan.binds), it.export)
+                          for it in items),
+                    tuple(canon[nid] for nid in sp.ext))
+
         seg_start = {seg.indices[0]: seg for seg in plan.segments}
         idx = 0
         while idx < len(specs):
             seg = seg_start.get(idx)
             if seg is not None and mesh is not None:
-                seg_set = set(seg.indices)
-                items = []
-                for j in seg.indices:
-                    spec = specs[j]
-                    _op, cplan = self.cache.get_or_build(graph, spec)
-                    roots = _spec_roots(spec)
-                    export = any(r in output_ids
-                                 or (cons.get(r, set()) - seg_set)
-                                 for r in roots)
-                    items.append(SegmentItem(cplan, spec.placement,
-                                             roots, export))
-                built = build_segment_fn(items, mesh)
-                if built is not None:
-                    fn, ext, _epil = built
+                items = _segment_items(graph, plan, seg, self.cache)
+                sp = plan_segment(items, mesh)
+                if isinstance(sp, SegmentFallback):
+                    # mesh can't realize the costed placement: record
+                    # and let the members run as local fused steps
+                    self.record_fallback("segment", sp.reason,
+                                         specs=tuple(seg.indices),
+                                         hard=real_mesh)
+                else:
                     step_idx = len(steps)
-                    steps.append(("seg", fn, ext,
+                    steps.append(("seg", sp,
                                   tuple(it.roots for it in items
                                         if it.export)))
-                    key_parts.append((
-                        "seg", mesh,
-                        tuple((it.cplan.cache_key(), it.placement.epilogue,
-                               tuple(b.nid in it.placement.sharded
-                                     for b in it.cplan.binds), it.export)
-                              for it in items),
-                        tuple(canon[nid] for nid in ext)))
+                    key_parts.append(_seg_key(items, sp))
+                    self._seg_plans.append(sp)
                     for j in seg.indices:
                         spec_step[j] = step_idx
                     for item_idx, it in enumerate(items):
@@ -404,21 +489,20 @@ class CompiledPlan:
                 _op, cplan = self.cache.get_or_build(graph, spec)
                 roots = _spec_roots(spec)
                 pl = getattr(spec, "placement", None)
-                built = None
+                sp = None
                 if pl is not None and pl.arm == "distributed" \
                         and mesh is not None:
-                    built = build_segment_fn(
-                        [SegmentItem(cplan, pl, roots, True)], mesh)
+                    items = [SegmentItem(cplan, pl, roots, True)]
+                    sp = plan_segment(items, mesh)
+                    if isinstance(sp, SegmentFallback):
+                        self.record_fallback("operator", sp.reason,
+                                             specs=(idx,), hard=real_mesh)
+                        sp = None
                 bind_nids = tuple(b.nid for b in cplan.binds)
-                if built is not None:
-                    fn, ext, _epil = built
-                    steps.append(("seg", fn, ext, (roots,)))
-                    key_parts.append((
-                        "seg", mesh,
-                        ((cplan.cache_key(), pl.epilogue,
-                          tuple(b.nid in pl.sharded for b in cplan.binds),
-                          True),),
-                        tuple(canon[nid] for nid in ext)))
+                if sp is not None:
+                    steps.append(("seg", sp, (roots,)))
+                    key_parts.append(_seg_key(items, sp))
+                    self._seg_plans.append(sp)
                 else:
                     steps.append(("fused", cplan, bind_nids, roots))
                     key_parts.append((
@@ -448,6 +532,10 @@ class CompiledPlan:
 
         pallas = self.pallas
 
+        def _mat(v):
+            # a value partitioned for a segment, consumed whole elsewhere
+            return v.unshard() if isinstance(v, ShardedBCSR) else v
+
         def plan_fn(*arrays):
             env: dict[int, object] = dict(zip(in_nids, arrays))
             for nid, v in lits:         # trace-time constants
@@ -455,8 +543,18 @@ class CompiledPlan:
             for step_idx, step in enumerate(steps):
                 kind = step[0]
                 if kind == "seg":
-                    _, fn, ext, out_roots = step
-                    outs = fn(*[env[nid] for nid in ext])
+                    _, sp, out_roots = step
+                    vals = [env[nid] for nid in sp.ext]
+                    # trace-time lowering: in_specs chosen from the
+                    # actual value formats (jit retraces per pytree
+                    # structure, so each format gets its own lowering)
+                    lowered = lower_segment(sp, mesh, vals, pallas=pallas)
+                    if isinstance(lowered, SegmentFallback):
+                        # recorded by __call__'s preflight; numerically
+                        # identical local execution (collectives exact)
+                        outs = run_segment_local(sp, vals, pallas=pallas)
+                    else:
+                        outs = lowered(*vals)
                     for out, roots in zip(outs, out_roots):
                         if len(roots) > 1:
                             for k, r in enumerate(roots):
@@ -466,7 +564,7 @@ class CompiledPlan:
                 elif kind == "fused":
                     _, cplan, bind_nids, roots = step
                     out = kops.execute(
-                        cplan, {nid: env[nid] for nid in bind_nids},
+                        cplan, {nid: _mat(env[nid]) for nid in bind_nids},
                         pallas=pallas)
                     if len(roots) > 1:
                         for k, r in enumerate(roots):
@@ -478,7 +576,7 @@ class CompiledPlan:
                     env[node.nid] = _eval_basic(graph, node, env)
                 for dead in free.get(step_idx, ()):
                     env.pop(dead, None)      # release: XLA reuses buffers
-            return tuple(env[o] for o in output_ids)
+            return tuple(_mat(env[o]) for o in output_ids)
 
         key = (tuple(key_parts), tuple(canon[o] for o in output_ids),
                self.pallas)
@@ -491,27 +589,23 @@ class CompiledPlan:
     # -- per-operator fallback path ----------------------------------------
 
     def _dist_call(self, idx: int, spec, cplan, env: dict[int, object]):
-        """Run one distributed-placed operator, or None to fall back."""
+        """Run one distributed-placed operator, or None to fall back —
+        recording the downgrade reason (and raising under strict when a
+        real mesh abandons its costed placement)."""
         pl = getattr(spec, "placement", None)
         if pl is None or pl.arm != "distributed" or self.layout is None:
             return None
+        mesh = _mesh_of(self.layout)
+        from repro.kernels.distributed import build_dist_fn
         vals = [env[b.nid] for b in cplan.binds]
-        if any(hasattr(v, "todense") for v in vals):
-            return None                    # sparse operand: local fallback
-        mesh = getattr(self.layout, "mesh", None)
-        try:
-            hash(mesh)
-            key = (idx, mesh)
-        except TypeError:                  # unhashable mesh stand-in
-            key = (idx, id(mesh))
-        fn = self._dist_fns.get(key)
-        if fn is None:
-            from repro.kernels.distributed import build_dist_fn
-            fn = build_dist_fn(cplan, mesh, pl)
-            self._dist_fns[key] = fn if fn is not None else False
-        if not fn:
+        built, fb = build_dist_fn(cplan, mesh, pl, pallas=self.pallas,
+                                  values=vals)
+        if built is None:
+            self.record_fallback("operator", fb.reason, specs=(idx,),
+                                 hard=_is_real_mesh(mesh))
             return None
-        return fn(*vals)
+        fn, prepared = built
+        return fn(*prepared)
 
     def _literals(self, graph: Graph) -> dict[int, object]:
         if self._lit_cache is None:
@@ -553,6 +647,61 @@ class CompiledPlan:
         outs = [env[o.nid] for o in graph.outputs]
         return outs[0] if len(outs) == 1 else tuple(outs)
 
+    # -- sharded sparse input preparation -----------------------------------
+
+    def _partition_memo(self, nid: int, v: BCSR, nparts: int):
+        """Memoized block-row partition of a concrete BCSR input (O(nnz)
+        host work — cached by data-array identity so steady-state calls
+        with the same matrix pay it once)."""
+        from repro.kernels.blocksparse import partition_block_rows
+        key = (nid, nparts, id(v.data))
+        hit = self._part_cache.get(key)
+        if hit is not None and hit[0] is v.data:
+            return hit[1]
+        part = partition_block_rows(v, nparts)
+        if part is not None:
+            if len(self._part_cache) > 16:
+                self._part_cache.clear()
+            self._part_cache[key] = (v.data, part)
+        return part
+
+    def _prepare_inputs(self, vals: dict[int, object]) -> None:
+        """Preflight for the staged call: block-row-partition graph-input
+        BCSRs that a ``shard_map`` segment consumes row-sharded (must run
+        outside ``jit`` — re-bucketing needs concrete indices), recording
+        every operand that forces the segment to run locally instead."""
+        for sp in self._seg_plans:
+            sparse_noagg = {it.cplan.main.nid for it in sp.items
+                            if it.export and it.cplan.variant == NO_AGG
+                            and it.cplan.main.exploit}
+            for nid in sp.ext:
+                if not sp.ext_shard[nid] or nid not in vals:
+                    continue
+                v = vals[nid]
+                if isinstance(v, BCSR):
+                    if nid in sparse_noagg:
+                        self.record_fallback(
+                            "segment",
+                            f"sparse no_agg output of operand %{nid} "
+                            f"cannot cross the shard_map boundary",
+                            hard=True)
+                        continue
+                    part = self._partition_memo(nid, v, sp.n)
+                    if part is None:
+                        self.record_fallback(
+                            "segment",
+                            f"sparse operand %{nid}: "
+                            f"{v.shape[0] // v.bs} block rows not "
+                            f"partitionable across {sp.n} shards",
+                            hard=True)
+                    else:
+                        vals[nid] = part
+                elif isinstance(v, DictCompressed):
+                    self.record_fallback(
+                        "segment",
+                        f"row-sharded operand %{nid} is CLA-compressed: "
+                        f"no distributed decompression path", hard=True)
+
     # -- entry point ---------------------------------------------------------
 
     def __call__(self, bindings: dict[str, object]):
@@ -560,13 +709,13 @@ class CompiledPlan:
         for node in graph.inputs():
             if node.name not in bindings:
                 raise KeyError(f"missing binding for input '{node.name}'")
-        if self.staged and self.pallas != "interpret" and not any(
-                isinstance(bindings[n.name], (BCSR, DictCompressed))
-                for n in graph.inputs()):
-            fn, _raw = self.staged_callable()
-            outs = fn(*[bindings[n.name] for n in graph.inputs()])
-            return outs[0] if len(outs) == 1 else tuple(outs)
-        return self._call_per_op(bindings)
+        if not self.staged:
+            return self._call_per_op(bindings)
+        fn, _raw = self.staged_callable()
+        vals = {n.nid: bindings[n.name] for n in graph.inputs()}
+        self._prepare_inputs(vals)
+        outs = fn(*[vals[n.nid] for n in graph.inputs()])
+        return outs[0] if len(outs) == 1 else tuple(outs)
 
 
 def _last_uses(plan: ExecPlan) -> dict[int, list[int]]:
@@ -624,6 +773,53 @@ def staged_plan_key(plan: ExecPlan, pallas: str = "never",
     return (tuple(key_parts), tuple(canon[o] for o in output_ids), pallas)
 
 
+def plan_fallbacks(plan: ExecPlan, layout=None, pallas: str = "never",
+                   staged: bool = True,
+                   cache: Optional[PlanCache] = None) -> list:
+    """Statically derivable execution downgrades for this plan — the
+    compile-time portion of ``explain()['execution']['fallbacks']``.
+
+    Replays the same :func:`~repro.kernels.distributed.plan_segment`
+    validation the staged lowering runs (via the shared
+    :func:`_segment_items`), so the report can never drift from what
+    execution does.  Value-format downgrades (a sparse operand whose
+    block rows don't partition) depend on the bound arrays and are
+    recorded at call time on :attr:`CompiledPlan.fallbacks`;
+    ``Compiled.explain()`` merges both."""
+    cache = cache if cache is not None else PLAN_CACHE
+    out: list[dict] = []
+    if not staged:
+        out.append({"site": "plan",
+                    "reason": "staged=False: per-operator debug "
+                              "dispatch requested"})
+    mesh = _mesh_of(layout)
+    if mesh is None:
+        return out
+    from repro.kernels.distributed import (SegmentFallback, SegmentItem,
+                                           plan_segment)
+    graph = plan.graph
+    seg_member = {j for seg in plan.segments for j in seg.indices}
+    for seg in plan.segments:
+        items = _segment_items(graph, plan, seg, cache)
+        sp = plan_segment(items, mesh)
+        if isinstance(sp, SegmentFallback):
+            out.append({"site": "segment", "specs": list(seg.indices),
+                        "reason": sp.reason})
+    for idx, spec in enumerate(plan.specs):
+        if idx in seg_member:
+            continue
+        pl = getattr(spec, "placement", None)
+        if pl is None or pl.arm != "distributed":
+            continue
+        _op, cplan = cache.get_or_build(graph, spec)
+        sp = plan_segment(
+            [SegmentItem(cplan, pl, _spec_roots(spec), True)], mesh)
+        if isinstance(sp, SegmentFallback):
+            out.append({"site": "operator", "specs": [idx],
+                        "reason": sp.reason})
+    return out
+
+
 def freed_intermediates(plan: ExecPlan) -> int:
     """Number of intermediate values the staged trace releases at their
     last use (graph outputs excepted) — the plan-level buffer-donation
@@ -634,12 +830,19 @@ def freed_intermediates(plan: ExecPlan) -> int:
 
 
 def compile_plan(plan: ExecPlan, pallas: str = "never",
-                 layout=None, staged: bool = True) -> CompiledPlan:
+                 layout=None, staged: bool = True,
+                 strict: bool = False) -> CompiledPlan:
     """Bind an ExecPlan to its executable form.
 
     ``staged=True`` (default) compiles the whole plan into a single
-    jitted computation (one dispatch per call, whole-plan cached);
-    ``staged=False`` keeps the per-operator interpreter dispatch — the
-    debug/fallback path, also taken automatically for sparse operands and
-    ``pallas="interpret"``."""
-    return CompiledPlan(plan, pallas=pallas, layout=layout, staged=staged)
+    jitted computation (one dispatch per call, whole-plan cached) for
+    every operand format and Pallas mode — BCSR mains and
+    ``pallas="interpret"`` included; ``staged=False`` selects the
+    per-operator interpreter dispatch, an explicit debug path.  Every
+    execution downgrade is recorded on :attr:`CompiledPlan.fallbacks`;
+    ``strict=True`` (``FusionContext(verify="strict")``) raises when a
+    costed distributed placement on a real mesh is abandoned at
+    execution time.  The per-template dispatch rules are tabulated in
+    ``docs/architecture.md`` (kernel-dispatch decision table)."""
+    return CompiledPlan(plan, pallas=pallas, layout=layout, staged=staged,
+                        strict=strict)

@@ -670,15 +670,20 @@ def _verify_cplan(graph, spec, cp, idx: int) -> list[Diagnostic]:
 # --------------------------------------------------------------------------
 
 def verify_exec(eplan, strict: bool = False, pallas: str = "never",
-                last_uses: Optional[dict] = None) -> list[Diagnostic]:
+                last_uses: Optional[dict] = None,
+                layout=None) -> list[Diagnostic]:
     """Checker 3: liveness soundness of ``_last_uses``, donation-aliasing
-    safety, and (strict) whole-plan-cache key completeness.
+    safety, no-silent-fallback on real meshes (EXE005), and (strict)
+    whole-plan-cache key completeness.
 
     ``last_uses`` injects a liveness map for testing; by default the one
     codegen executes (:func:`repro.core.codegen._last_uses`) is
     simulated — with the same output-protection the runtime applies, so
     a diagnostic here means the *executed* plan would read a freed
-    buffer."""
+    buffer.  ``layout`` enables EXE005: on a *real* mesh, every costed
+    distributed placement must be realizable by the runtime — a
+    placement the execution layer would quietly abandon is a costing
+    bug, not an estimate (the plan priced a path it never takes)."""
     from .codegen import _last_uses as derive_last_uses
 
     graph = eplan.graph
@@ -718,8 +723,39 @@ def verify_exec(eplan, strict: bool = False, pallas: str = "never",
                   "inputs are never donated, so this stays safe "
                   "read-only")
 
+    if layout is not None:
+        out.extend(_verify_exec_fallbacks(eplan, layout))
     if strict:
         out.extend(_verify_exec_strict(eplan, pallas))
+    return out
+
+
+def _verify_exec_fallbacks(eplan, layout) -> list[Diagnostic]:
+    """EXE005 (no-silent-fallback): replay the distributed lowering's
+    plan-time validation (:func:`repro.core.codegen.plan_fallbacks`) and
+    report every placement a *real* mesh cannot realize as an error —
+    the runtime would downgrade those segments to local execution, so
+    the plan's distributed cost priced a path execution never takes.
+    On an abstract ``LogicalMesh`` the same downgrades are by design
+    (cost-only planning) and reported as warnings."""
+    from .codegen import _is_real_mesh, _mesh_of, plan_fallbacks
+
+    out: list[Diagnostic] = []
+    mesh = _mesh_of(layout)
+    if mesh is None or not _is_real_mesh(mesh):
+        # abstract LogicalMesh: local execution is cost-only planning by
+        # design, and explain() reports it — nothing silent to flag
+        return out
+    for fb in plan_fallbacks(eplan, layout=layout):
+        if fb.get("site") == "plan":
+            continue                      # staged=False: user's choice
+        specs = fb.get("specs")
+        _diag(out, "EXE005", "error", None,
+              f"distributed placement of spec(s) {specs} falls back to "
+              f"local execution: {fb['reason']}",
+              "the cost model priced the distributed arm; on a real "
+              "mesh this is a silent-downgrade bug (strict raises at "
+              "execution time)")
     return out
 
 
@@ -748,13 +784,14 @@ def _verify_exec_strict(eplan, pallas: str) -> list[Diagnostic]:
 # --------------------------------------------------------------------------
 
 def verify_plan(eplan, level: str = "cheap", params=None,
-                pallas: str = "never") -> VerifyReport:
+                pallas: str = "never", layout=None) -> VerifyReport:
     """Run every checker over an ExecPlan at the given effort level.
 
     ``"cheap"`` — O(plan) structural checks (the stage-boundary default);
     ``"strict"`` — additionally builds every CPlan, replays placements
     and segments, and exercises the whole-plan cache key; ``"off"`` —
-    empty report."""
+    empty report.  ``layout`` enables the EXE005 no-silent-fallback
+    check against a real mesh."""
     assert level in ("off", "cheap", "strict"), level
     report = VerifyReport(level=level)
     if level == "off":
@@ -764,5 +801,5 @@ def verify_plan(eplan, level: str = "cheap", params=None,
     report.diagnostics.extend(
         verify_selection(eplan, params=params, strict=strict))
     report.diagnostics.extend(
-        verify_exec(eplan, strict=strict, pallas=pallas))
+        verify_exec(eplan, strict=strict, pallas=pallas, layout=layout))
     return report

@@ -167,6 +167,107 @@ class DictCompressed:
         return dense / comp
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class ShardedBCSR:
+    """Block-row-partitioned BCSR: the distributed form of :class:`BCSR`.
+
+    ``partition_block_rows`` splits a row-major BCSR into ``nparts``
+    equal block-row ranges and pads every shard to the same block count
+    so the stacked representation has static shapes — the shape
+    ``shard_map`` needs to row-shard a sparse main with ``P(axes)`` on
+    the leading axis.  Padding blocks carry zero data and point at the
+    shard's *last* real block-row, which keeps each shard's block list
+    row-major sorted and makes the padded contributions exact zeros for
+    every sparse execution path (sum aggregations add 0; the Outer
+    skeleton's revisit-accumulate sees ``rows[b] == rows[b-1]`` and
+    accumulates 0 instead of re-initializing the output block).
+
+    data:   (nparts, nb_max, bs, bs) padded per-shard blocks
+    rows:   (nparts, nb_max) int32 *shard-local* block-row indices
+    cols:   (nparts, nb_max) int32 block-col indices
+    shape:  global logical (m, n)
+    """
+    data: jnp.ndarray
+    rows: jnp.ndarray
+    cols: jnp.ndarray
+    shape: tuple[int, int]
+    bs: int = DEFAULT_BLOCK
+    nparts: int = 1
+
+    def tree_flatten(self):
+        return (self.data, self.rows, self.cols), \
+            (self.shape, self.bs, self.nparts)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, rows, cols = children
+        return cls(data, rows, cols, aux[0], aux[1], aux[2])
+
+    def local_bcsr(self) -> BCSR:
+        """The one-shard view (inside a ``shard_map`` body, where the
+        leading axis has been divided down to 1): a BCSR over this
+        shard's (m/nparts, n) row panel with shard-local row indices."""
+        m, n = self.shape
+        return BCSR(self.data[0], self.rows[0], self.cols[0],
+                    (m // self.nparts, n), self.bs)
+
+    def unshard(self) -> BCSR:
+        """Reassemble the global BCSR (works under trace: index
+        arithmetic + reshape only).  Padding blocks survive as explicit
+        zero blocks — semantically neutral everywhere (``todense``
+        scatters with ``.add``; sparse kernels accumulate 0)."""
+        m, n = self.shape
+        rows_per_shard = (m // self.bs) // self.nparts
+        offset = (jnp.arange(self.nparts, dtype=self.rows.dtype)
+                  * rows_per_shard)[:, None]
+        return BCSR(self.data.reshape(-1, self.bs, self.bs),
+                    (self.rows + offset).reshape(-1),
+                    self.cols.reshape(-1), (m, n), self.bs)
+
+    def todense(self) -> jnp.ndarray:
+        return self.unshard().todense()
+
+
+def partition_block_rows(x: BCSR, nparts: int):
+    """Split ``x`` into ``nparts`` equal block-row ranges →
+    :class:`ShardedBCSR`, or None when the partition cannot be built:
+    the block-row count does not divide ``nparts``, or the block index
+    arrays are tracers (partitioning re-buckets by concrete row index,
+    so it must run outside ``jit`` — callers fall back to local
+    execution and report why)."""
+    m, n = x.shape
+    mb = m // x.bs
+    if nparts <= 1 or mb % nparts:
+        return None
+    try:
+        rows = np.asarray(x.rows)
+        cols = np.asarray(x.cols)
+    except Exception:                      # tracer: cannot re-bucket
+        return None
+    rows_per_shard = mb // nparts
+    shard_of = rows // rows_per_shard
+    counts = np.bincount(shard_of, minlength=nparts)
+    nb_max = max(int(counts.max()), 1)
+    data = np.asarray(x.data)
+    pdata = np.zeros((nparts, nb_max, x.bs, x.bs), data.dtype)
+    prows = np.zeros((nparts, nb_max), np.int32)
+    pcols = np.zeros((nparts, nb_max), np.int32)
+    for s in range(nparts):
+        idx = np.nonzero(shard_of == s)[0]        # row-major order kept
+        k = len(idx)
+        if k:
+            pdata[s, :k] = data[idx]
+            prows[s, :k] = rows[idx] - s * rows_per_shard
+            pcols[s, :k] = cols[idx]
+            # padding points at the last real block-row (sorted order
+            # preserved; Outer revisit-accumulate adds exact zeros)
+            prows[s, k:] = prows[s, k - 1]
+            pcols[s, k:] = pcols[s, k - 1]
+    return ShardedBCSR(jnp.asarray(pdata), jnp.asarray(prows),
+                       jnp.asarray(pcols), (m, n), x.bs, nparts)
+
+
 def pad_to_blocks(x, bs: int = DEFAULT_BLOCK):
     """Zero-pad a dense matrix so both dims divide the block size."""
     m, n = x.shape

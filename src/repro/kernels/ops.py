@@ -38,8 +38,15 @@ from .blocksparse import BCSR, DictCompressed
 # --------------------------------------------------------------------------
 
 def execute(cplan: CPlan, env: dict[int, object], *,
-            pallas: str = "never") -> jnp.ndarray:
-    """Run one fused operator.  ``pallas`` ∈ {"never","interpret","tpu"}."""
+            pallas: str = "never",
+            shard_rows: Optional[int] = None) -> jnp.ndarray:
+    """Run one fused operator.  ``pallas`` ∈ {"never","interpret","tpu"}.
+
+    ``shard_rows`` is the shard-local main-row count when this operator
+    executes inside a ``shard_map`` body: the Pallas template lowerings
+    derive their grids and BlockSpecs from it (largest divisor ≤ the
+    template's tile target) instead of the global-tuned defaults, so the
+    generated kernels lower as ``pallas_call`` inside the region."""
     main = env.get(cplan.main.nid)
     if isinstance(main, DictCompressed):
         out = _execute_dict(cplan, env)
@@ -52,6 +59,11 @@ def execute(cplan: CPlan, env: dict[int, object], *,
         has_mm = any(op == "matmul" for (_, op, *_rest) in cplan.prog)
         from repro.core.templates import TType as _T
         if cplan.main.exploit and (cplan.ttype == _T.OUTER or not has_mm):
+            if pallas != "never" and cplan.ttype == _T.OUTER \
+                    and cplan.variant in (RIGHT_MM, FULL_AGG):
+                from .outerprod import outer_pallas
+                return outer_pallas(cplan, env,
+                                    interpret=pallas == "interpret")
             return _execute_bcsr(cplan, env)
         env = dict(env)
         env[cplan.main.nid] = main.todense()   # not exploitable: decompress
@@ -59,13 +71,22 @@ def execute(cplan: CPlan, env: dict[int, object], *,
            for k, v in env.items()}
     if pallas != "never":
         from . import cellwise, multiagg, rowwise
+        from .cellwise import pick_block
         interpret = pallas == "interpret"
         if cplan.extra:
-            return multiagg.multiagg_pallas(cplan, env, interpret=interpret)
+            block = (256, 512) if shard_rows is None else \
+                (pick_block(shard_rows, 256), 512)
+            return multiagg.multiagg_pallas(cplan, env, interpret=interpret,
+                                            block=block)
         if cplan.ttype in (TType.CELL, TType.MAGG):
-            return cellwise.cell_pallas(cplan, env, interpret=interpret)
+            block = (256, 512) if shard_rows is None else \
+                (pick_block(shard_rows, 256), 512)
+            return cellwise.cell_pallas(cplan, env, interpret=interpret,
+                                        block=block)
         if cplan.ttype == TType.ROW:
-            return rowwise.row_pallas(cplan, env, interpret=interpret)
+            br = 128 if shard_rows is None else pick_block(shard_rows, 128)
+            return rowwise.row_pallas(cplan, env, interpret=interpret,
+                                      block_rows=br)
         # Outer over dense main: fall through to the XLA path
     return ref.execute_dense(cplan, env)
 

@@ -120,9 +120,10 @@ def test_hybrid_layout_parity_staged_vs_per_op():
     _close(g_staged, g_per_op)
 
 
-def test_bcsr_falls_back_to_per_op_and_agrees():
-    """Sparse operands take the per-operator path automatically — same
-    numbers as the dense reference, no staged-function build."""
+def test_bcsr_compiles_staged_and_agrees():
+    """Sparse operands compile staged like everything else (the BCSR
+    program lowers inside the whole-plan jit) — same numbers as the
+    dense reference, one dispatch per call, no recorded fallback."""
     from repro.kernels.blocksparse import BCSR
     rng2 = np.random.default_rng(5)
     mask = np.kron(rng2.random((4, 3)) < 0.5, np.ones((16, 16)))
@@ -135,16 +136,21 @@ def test_bcsr_falls_back_to_per_op_and_agrees():
     compiled = planned.compile(staged=True)
     got = compiled(X, B)
     _close(got, jnp.asarray(Xd.T) @ B, tol=2e-4)
-    assert compiled._cplan._staged_fn is None     # never built for sparse
+    assert compiled._cplan._staged_fn is not None   # staged, not per-op
+    assert compiled._cplan.fallbacks == []
+    assert compiled.explain()["execution"]["fallbacks"] == []
 
 
-def test_pallas_interpret_falls_back_to_per_op():
+def test_pallas_interpret_compiles_staged():
+    """pallas="interpret" stages like any other mode: the interpreted
+    Pallas kernels trace inside the whole-plan jit."""
     f = fused(lambda X, Y: (X * Y + 1.0).sum())
     X, Y = arr(32, 32), arr(32, 32)
     planned = f.trace(X, Y).plan(mode="gen")
     compiled = planned.compile(pallas="interpret")
     _close(compiled(X, Y), jnp.sum(X * Y + 1.0).reshape(1, 1), tol=2e-4)
-    assert compiled._cplan._staged_fn is None
+    assert compiled._cplan._staged_fn is not None
+    assert compiled._cplan.fallbacks == []
 
 
 # --------------------------------------------------------------------------

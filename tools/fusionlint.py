@@ -17,7 +17,12 @@ Usage (from the repo root):
 
 ``--strict`` runs the full pass (CPlan construction, placement/segment
 replay, whole-plan-key completeness) instead of the default O(plan)
-cheap mode; ``--verbose`` prints every clean plan, not just a summary.
+cheap mode, and additionally enforces **no-silent-fallback**: every
+execution-time downgrade the compiled plan would take (distributed
+segment running locally, sparse operand refusing to shard, per-operator
+debug dispatch) must carry a nonempty recorded reason — a fallback
+entry without one is an error.  ``--verbose`` prints every clean plan
+and every explained fallback, not just a summary.
 """
 
 from __future__ import annotations
@@ -31,6 +36,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import numpy as np  # noqa: E402
 
 from repro.core import Fused, fusion_mode  # noqa: E402
+from repro.core.codegen import plan_fallbacks  # noqa: E402
 from repro.core.select import MODES  # noqa: E402
 from repro.core.verify import verify_plan  # noqa: E402
 
@@ -117,9 +123,27 @@ def _mesh():
     return LogicalMesh({"data": 4})
 
 
+def _check_fallbacks(eplan, layout, label: str,
+                     verbose: bool) -> tuple[int, int]:
+    """no-silent-fallback: every downgrade the compiled plan would take
+    must carry a nonempty recorded reason.  Returns (total, silent)."""
+    entries = plan_fallbacks(eplan, layout=layout)
+    silent = 0
+    for fb in entries:
+        site = fb.get("site", "?")
+        reason = str(fb.get("reason", "") or "").strip()
+        if not reason:
+            silent += 1
+            print(f"{label}: SILENT fallback at site={site!r} — "
+                  "no reason recorded")
+        elif verbose:
+            print(f"{label}: fallback[{site}] {reason}")
+    return len(entries), silent
+
+
 def lint(algos: list[str], modes: list[str], level: str,
          verbose: bool) -> int:
-    n_plans = n_errors = n_warnings = 0
+    n_plans = n_errors = n_warnings = n_fallbacks = n_silent = 0
     failed: list[str] = []
     layouts = [("local", None), ("mesh[data=4]", _mesh())]
     for algo in algos:
@@ -129,7 +153,7 @@ def lint(algos: list[str], modes: list[str], level: str,
                     label = f"{algo}/{region} mode={mode} {lname}"
                     with fusion_mode(mode, layout=layout, verify="off"):
                         eplan = wrapper.plan_for(**args)
-                    report = verify_plan(eplan, level=level)
+                    report = verify_plan(eplan, level=level, layout=layout)
                     n_plans += 1
                     n_errors += len(report.errors)
                     n_warnings += len(report.warnings)
@@ -137,8 +161,18 @@ def lint(algos: list[str], modes: list[str], level: str,
                         failed.append(label)
                     if report.diagnostics or verbose:
                         print(f"{label}: {report.pretty()}")
+                    if level == "strict":
+                        total, silent = _check_fallbacks(
+                            eplan, layout, label, verbose)
+                        n_fallbacks += total
+                        n_silent += silent
+                        if silent:
+                            n_errors += silent
+                            failed.append(f"{label} [no-silent-fallback]")
     print(f"fusionlint: {n_plans} plans verified [{level}] — "
-          f"{n_errors} error(s), {n_warnings} warning(s)")
+          f"{n_errors} error(s), {n_warnings} warning(s)"
+          + (f", {n_fallbacks} fallback(s) ({n_silent} silent)"
+             if level == "strict" else ""))
     if failed:
         print("failing plans:")
         for label in failed:
