@@ -4,16 +4,19 @@
 Usage::
 
     python benchmarks/compare.py BASELINE CURRENT \\
-        [--threshold 1.3] [--gate 'dispatch_chain*_whole_plan']
+        [--threshold 1.3] [--gate 'dispatch_chain*_whole_plan,serving_batched']
 
 Both files are ``repro-bench-v1`` artifacts (``benchmarks.run --json``).
 Every row shared by both files is printed with its current/baseline
-ratio; rows whose name matches the ``--gate`` glob (default: the
-dispatch-overhead whole-plan medians — the staged backend's headline
-number) additionally *gate* the run: any gated row slower than
-``threshold ×`` its baseline, or missing from the current artifact,
-exits nonzero.  CI runs this against the committed seed so a PR cannot
-silently regress whole-plan dispatch overhead.
+ratio; rows whose name matches any of the comma-separated ``--gate``
+globs (default: the dispatch-overhead whole-plan medians plus the
+serving-throughput median — the staged backend's headline numbers)
+additionally *gate* the run: any gated row slower than ``threshold ×``
+its baseline, or missing from the current artifact, exits nonzero.
+Each glob must also match at least one baseline row, so a renamed
+benchmark cannot silently un-gate itself.  CI runs this against the
+committed seed so a PR cannot regress whole-plan dispatch overhead or
+serving throughput.
 
 Absolute microbench timings move with the host, so the default gate is
 deliberately loose (1.3×) and only guards order-of-magnitude claims —
@@ -43,13 +46,19 @@ def main(argv=None) -> int:
     ap.add_argument("--threshold", type=float, default=1.3,
                     help="fail when a gated row's us_per_call exceeds "
                          "threshold x baseline (default: 1.3)")
-    ap.add_argument("--gate", default="dispatch_chain*_whole_plan",
-                    help="glob of row names that gate the run "
-                         "(default: dispatch-overhead whole-plan rows)")
+    ap.add_argument("--gate",
+                    default="dispatch_chain*_whole_plan,serving_batched",
+                    help="comma-separated globs of row names that gate "
+                         "the run (default: dispatch-overhead whole-plan "
+                         "rows + the serving-throughput median)")
     args = ap.parse_args(argv)
 
     base = load_rows(args.baseline)
     cur = load_rows(args.current)
+    globs = [g.strip() for g in args.gate.split(",") if g.strip()]
+
+    def gated(name: str) -> bool:
+        return any(fnmatch.fnmatch(name, g) for g in globs)
 
     failures: list[str] = []
     shared = sorted(set(base) & set(cur))
@@ -57,30 +66,30 @@ def main(argv=None) -> int:
     for name in shared:
         b, c = base[name]["us_per_call"], cur[name]["us_per_call"]
         ratio = c / b if b > 0 else float("inf")
-        gated = fnmatch.fnmatch(name, args.gate)
         flag = ""
-        if gated and ratio > args.threshold:
+        if gated(name) and ratio > args.threshold:
             flag = f"  REGRESSION (> {args.threshold}x)"
             failures.append(f"{name}: {b:.1f} -> {c:.1f} us "
                             f"({ratio:.2f}x)")
-        elif gated:
+        elif gated(name):
             flag = "  [gate]"
         print(f"{name:42s} {b:10.1f} {c:10.1f} {ratio:7.2f}{flag}")
 
     for name in sorted(base):
-        if fnmatch.fnmatch(name, args.gate) and name not in cur:
+        if gated(name) and name not in cur:
             failures.append(f"{name}: present in baseline, missing from "
                             "current artifact")
-    if not any(fnmatch.fnmatch(n, args.gate) for n in base):
-        failures.append(f"no baseline row matches gate {args.gate!r} — "
-                        "regenerate the seed artifact")
+    for g in globs:
+        if not any(fnmatch.fnmatch(n, g) for n in base):
+            failures.append(f"no baseline row matches gate {g!r} — "
+                            "regenerate the seed artifact")
 
     if failures:
         print("\nbench-compare: FAIL")
         for f in failures:
             print(f"  {f}")
         return 1
-    n_gated = sum(1 for n in shared if fnmatch.fnmatch(n, args.gate))
+    n_gated = sum(1 for n in shared if gated(n))
     print(f"\nbench-compare: OK — {n_gated} gated row(s) within "
           f"{args.threshold}x of the seed")
     return 0

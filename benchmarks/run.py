@@ -25,6 +25,7 @@ MODULES = [
     "micro_compressed",  # Fig. 9
     "footprint",         # Fig. 10 (adapted)
     "dispatch_overhead",  # whole-plan vs per-operator dispatch
+    "serving",           # FusionServer load test (throughput + tails)
     "compile_overhead",  # Table 3 / Fig. 11
     "plan_enum",         # Fig. 12
     "e2e_algos",         # Tables 4/5

@@ -1,0 +1,189 @@
+"""Serving load test: N simulated clients against the fused-plan server.
+
+The paper's economics (negligible optimization/codegen overhead because
+plans amortize across invocations, §6.4/Fig. 11) only materialize if a
+*serving* layer actually reuses compiled plans under concurrent traffic.
+This harness measures that: ``N_CLIENTS`` threads fire l2svm/mlogreg
+scoring requests with jittered row counts across ≥3 shape buckets at a
+:class:`repro.serve.FusionServer`, once with continuous batching
+(requests sharing a structural plan + shape class execute as one vmapped
+whole-plan call) and once with per-request dispatch (``max_batch=1`` —
+same compiled plans, no batching).  Emitted rows:
+
+``serving_batched`` / ``serving_unbatched``
+    Wall microseconds per request over the whole load run (completed
+    requests / elapsed — i.e. 1e6/throughput).  ``serving_batched`` is
+    the gated headline number; its ``derived`` column records the
+    speedup over per-request dispatch and the mean batch occupancy.
+``serving_batched_p50`` / ``_p95`` / ``_p99``
+    Submit-to-result latency percentiles (µs) under the batched run.
+
+Both arms are warmed first (plan compile + every power-of-two batch
+class) so the run measures serving, not XLA builds.  Before timing, the
+harness asserts the batched/padded path is 1e-5-equal to direct region
+execution for every bucket.
+
+``--smoke`` runs a seconds-scale version (8 clients, 2 buckets) and
+asserts nonzero throughput and zero failed/rejected requests — the CI
+fast job's serving smoke.
+"""
+
+from __future__ import annotations
+
+import sys
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.algos.l2svm import _hinge
+from repro.algos.mlogreg import _probs
+from repro.serve import FusionServer, percentiles
+
+from .common import emit
+
+#: full-load configuration (≥32 clients over ≥3 shape buckets).  Row
+#: counts are scoring-batch sized: per-request payloads of tens of KB,
+#: where per-call dispatch overhead (what batching amortizes) dominates
+#: the extra stacking copy the batched path pays.
+N_CLIENTS = 32
+REQS_PER_CLIENT = 8
+BUCKET_ROWS = (115, 240, 490)        # pad_to=128 → classes 128/256/512
+N_FEATURES = 64
+N_CLASSES = 5
+PAD_TO = 128
+MAX_BATCH = 8
+WORKERS = 2
+
+
+def harness_regions(rows=BUCKET_ROWS, n_features=N_FEATURES,
+                    n_classes=N_CLASSES, seed=0):
+    """``(label, region, operands)`` cases: the l2svm hinge and mlogreg
+    softmax scoring regions at every row bucket.  Row counts sit off the
+    pad boundary so the padded path is actually exercised.  Shared by
+    the load run, the CI smoke, and ``tools/fusionlint.py --serving``
+    (which strict-verifies exactly these plans)."""
+    rng = np.random.default_rng(seed)
+    f32 = lambda a: jnp.asarray(a, jnp.float32)
+    cases = []
+    for m in rows:
+        X = f32(rng.standard_normal((m, n_features)))
+        w = f32(rng.standard_normal((n_features, 1)))
+        y = f32(rng.choice([-1.0, 1.0], (m, 1)))
+        cases.append((f"l2svm_hinge_m{m}", _hinge,
+                      {"X": X, "w": w, "y": y}))
+        B = f32(rng.standard_normal((n_features, n_classes)))
+        cases.append((f"mlogreg_probs_m{m}", _probs, {"X": X, "B": B}))
+    return cases
+
+
+def check_parity(server: FusionServer, cases, rtol=1e-5, atol=1e-5):
+    """Batched/padded serving must be numerically equal (1e-5) to direct
+    region execution for every case."""
+    futs = [(label, server.submit(region, **ops), region(**ops))
+            for label, region, ops in cases]
+    for label, fut, ref in futs:
+        got = np.asarray(fut.result(timeout=120))
+        ref = np.asarray(ref)
+        assert got.shape == ref.shape, \
+            f"{label}: served shape {got.shape} != direct {ref.shape}"
+        assert np.allclose(got, ref, rtol=rtol, atol=atol), \
+            f"{label}: served result diverges from direct execution " \
+            f"(max |Δ| = {np.abs(got - ref).max():.2e})"
+
+
+def run_load(server: FusionServer, cases, n_clients: int,
+             reqs_per_client: int) -> dict:
+    """Drive ``n_clients`` threads × ``reqs_per_client`` requests (each
+    picks a random case) and return throughput + latency summary."""
+    errors: list[Exception] = []
+    lock = threading.Lock()
+
+    def client(k: int) -> None:
+        rng = np.random.default_rng(10_000 + k)
+        futs = []
+        for _ in range(reqs_per_client):
+            _label, region, ops = cases[int(rng.integers(len(cases)))]
+            futs.append(server.submit(region, **ops))
+        for f in futs:
+            try:
+                f.result(timeout=300)    # results are host arrays already
+            except Exception as e:   # noqa: BLE001 - collected, asserted on
+                with lock:
+                    errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(k,), daemon=True)
+               for k in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    elapsed = time.perf_counter() - t0
+
+    total = n_clients * reqs_per_client
+    snap = server.metrics.snapshot()
+    lat = percentiles(server.metrics.latency_us.values())
+    return {
+        "requests": total,
+        "elapsed_s": elapsed,
+        "throughput_rps": total / elapsed,
+        "us_per_req": elapsed / total * 1e6,
+        "latency_us": lat,
+        "occupancy_mean": snap["batches"]["occupancy_mean"],
+        "failed": snap["requests"]["failed"] + len(errors),
+        "rejected": snap["requests"]["rejected"],
+        "errors": errors,
+    }
+
+
+def _serve_arm(cases, *, max_batch: int, pad_to: int, n_clients: int,
+               reqs_per_client: int, parity: bool = False) -> dict:
+    regions = [(region, ops) for _l, region, ops in cases]
+    sizes = [b for b in (1, 2, 4, 8, 16, 32) if b <= max_batch]
+    with FusionServer(workers=WORKERS, max_batch=max_batch,
+                      pad_to=pad_to) as server:
+        server.warm(regions, batch_sizes=tuple(sizes))
+        if parity:
+            check_parity(server, cases)
+        return run_load(server, cases, n_clients, reqs_per_client)
+
+
+def main(smoke: bool = False) -> None:
+    if smoke:
+        cases = harness_regions(rows=(60, 140), n_features=32, n_classes=3)
+        batched = _serve_arm(cases, max_batch=4, pad_to=64, n_clients=8,
+                             reqs_per_client=4, parity=True)
+        assert batched["failed"] == 0, \
+            f"serving smoke: {batched['failed']} failed requests " \
+            f"({batched['errors'][:3]})"
+        assert batched["rejected"] == 0
+        assert batched["throughput_rps"] > 0
+        print(f"serving smoke OK: {batched['requests']} requests, "
+              f"{batched['throughput_rps']:.0f} req/s, p95 "
+              f"{batched['latency_us']['p95']:.0f} us, occupancy "
+              f"{batched['occupancy_mean']:.2f}", flush=True)
+        return
+
+    cases = harness_regions()
+    batched = _serve_arm(cases, max_batch=MAX_BATCH, pad_to=PAD_TO,
+                         n_clients=N_CLIENTS,
+                         reqs_per_client=REQS_PER_CLIENT, parity=True)
+    unbatched = _serve_arm(cases, max_batch=1, pad_to=0,
+                           n_clients=N_CLIENTS,
+                           reqs_per_client=REQS_PER_CLIENT)
+    for arm in (batched, unbatched):
+        assert arm["failed"] == 0, f"load run failed: {arm['errors'][:3]}"
+
+    speedup = unbatched["us_per_req"] / batched["us_per_req"]
+    emit("serving_batched", batched["us_per_req"],
+         f"x{speedup:.2f}_vs_unbatched_occ{batched['occupancy_mean']:.1f}")
+    emit("serving_unbatched", unbatched["us_per_req"],
+         f"{unbatched['throughput_rps']:.0f}rps")
+    for q in ("p50", "p95", "p99"):
+        emit(f"serving_batched_{q}", batched["latency_us"][q], "latency")
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv[1:])

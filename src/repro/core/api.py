@@ -479,6 +479,32 @@ class Compiled:
         self._vjp_fn = None
         self._bwd_compiled: Optional[CompiledPlan] = None
 
+    # -- serving hooks ------------------------------------------------------
+    @property
+    def input_order(self) -> list[str]:
+        """Operand names in the staged function's positional order
+        (``graph.inputs()`` order — may differ from the expression
+        function's signature order)."""
+        return [n.name for n in self.planned.eplan.graph.inputs()]
+
+    def plan_key(self) -> tuple:
+        """Structural whole-plan signature of this compiled plan (the
+        mesh-free staged cache key).  Two Compiled objects with equal
+        plan keys share one staged function and one XLA executable — the
+        bucketing identity the fused-plan server
+        (:mod:`repro.serve.fusion`) batches concurrent requests by."""
+        from .codegen import staged_plan_key
+        return staged_plan_key(self.planned.eplan,
+                               pallas=self.planned.context.pallas)
+
+    def batched(self):
+        """Jitted vmapped form of the staged whole-plan function: takes
+        each input stacked to ``(B, *shape)`` in :attr:`input_order` and
+        returns the output tuple stacked the same way (batch elements
+        independent).  Mesh-free dense plans only; shared across
+        structurally-equal plans via the whole-plan cache."""
+        return self._cplan.batched_callable()
+
     # -- execution ----------------------------------------------------------
     def _run_plain(self, bound: dict):
         lay = self.planned.context.layout

@@ -85,6 +85,7 @@ class PlanCacheStats:
     misses: int = 0
     evictions: int = 0
     size: int = 0
+    capacity: int = 0
     codegen_time_s: float = 0.0
 
     @property
@@ -96,13 +97,31 @@ class PlanCache:
     """Thread-safe LRU cache of generated operators keyed by structural
     CPlan hash.  Bounded: least-recently-used operators are evicted past
     ``maxsize`` (XLA still holds its own executable cache; this bounds the
-    python-side operator objects)."""
+    python-side operator objects).  The bound is configurable — pass
+    ``maxsize``, set ``REPRO_PLAN_CACHE_CAPACITY`` in the environment, or
+    call :meth:`resize` on a live cache (long-lived serving processes
+    churn through thousands of plan structures; unbounded growth is a
+    slow leak)."""
 
-    def __init__(self, maxsize: int = 512) -> None:
+    def __init__(self, maxsize: Optional[int] = None) -> None:
+        if maxsize is None:
+            import os
+            maxsize = int(os.environ.get("REPRO_PLAN_CACHE_CAPACITY", 512))
         self.maxsize = int(maxsize)
         self._ops: "OrderedDict[str, GeneratedOp]" = OrderedDict()
         self._lock = threading.RLock()
-        self.stats = PlanCacheStats()
+        self.stats = PlanCacheStats(capacity=self.maxsize)
+
+    def resize(self, maxsize: int) -> None:
+        """Change the LRU capacity, evicting LRU entries past the new
+        bound immediately."""
+        with self._lock:
+            self.maxsize = int(maxsize)
+            self.stats.capacity = self.maxsize
+            while len(self._ops) > self.maxsize:
+                self._ops.popitem(last=False)
+                self.stats.evictions += 1
+            self.stats.size = len(self._ops)
 
     def get_or_build(self, graph: Graph, spec) -> tuple["GeneratedOp", "CPlan"]:
         """Returns (generated operator, this spec's CPlan).  The operator
@@ -134,7 +153,7 @@ class PlanCache:
     def clear(self) -> None:
         with self._lock:
             self._ops.clear()
-            self.stats = PlanCacheStats()
+            self.stats = PlanCacheStats(capacity=self.maxsize)
 
 
 PLAN_CACHE = PlanCache()
@@ -145,15 +164,17 @@ def plan_cache_stats() -> PlanCacheStats:
 
     Returns a :class:`PlanCacheStats` value (not a live view) with
     ``hits`` / ``misses`` / ``total`` (get-or-build calls), ``evictions``
-    (LRU past the 512-operator bound), ``size`` (operators currently
-    cached), and ``codegen_time_s`` (cumulative CPlan-build time on
-    misses).  The cache keys operators by *structural* CPlan hash, so a
-    hit means some structurally-equal plan — any expression, any
-    trace — already generated the operator.  Useful assertions:
+    (LRU past the configurable ``capacity`` bound — 512 operators by
+    default), ``size`` (operators currently cached), ``capacity`` (the
+    current LRU bound), and ``codegen_time_s`` (cumulative CPlan-build
+    time on misses).  The cache keys operators by *structural* CPlan
+    hash, so a hit means some structurally-equal plan — any expression,
+    any trace — already generated the operator.  Useful assertions:
     ``stats.total`` grows when a backward pass compiles, ``misses`` stays
     flat across re-traces of the same shapes."""
     with PLAN_CACHE._lock:
-        return replace(PLAN_CACHE.stats, size=len(PLAN_CACHE._ops))
+        return replace(PLAN_CACHE.stats, size=len(PLAN_CACHE._ops),
+                       capacity=PLAN_CACHE.maxsize)
 
 
 # --------------------------------------------------------------------------
@@ -166,11 +187,20 @@ class WholePlanCacheStats:
     misses: int = 0
     evictions: int = 0
     size: int = 0
+    capacity: int = 0
     build_time_s: float = 0.0
+    #: per-key stat records currently tracked / dropped past the bound
+    tracked_keys: int = 0
+    dropped_keys: int = 0
 
     @property
     def total(self) -> int:
         return self.hits + self.misses
+
+
+#: per-key stat records kept across entry churn (bounded separately from
+#: the function LRU so eviction metrics survive the evicted entries)
+KEY_STATS_CAPACITY = 4096
 
 
 class WholePlanCache:
@@ -179,13 +209,77 @@ class WholePlanCache:
     segment/placement structure + pallas policy + mesh).  A hit returns
     the *same* jitted function object, so XLA's executable cache is shared
     across structurally-equal CompiledPlans (``fuse_exprs`` in a loop,
-    re-traced shapes, the backward of an identical forward)."""
+    re-traced shapes, the backward of an identical forward).
 
-    def __init__(self, maxsize: int = 256) -> None:
+    **Build-once:** :meth:`get_or_create` serializes concurrent misses on
+    the same key — one thread builds, the rest wait and share the result —
+    so N threads compiling structurally-equal plans produce exactly one
+    jitted function (duplicate jit wrappers would each pay their own XLA
+    compile later).
+
+    **Lifecycle:** the LRU bound is configurable (``maxsize`` /
+    ``REPRO_WHOLE_PLAN_CACHE_CAPACITY`` / :meth:`resize`) and per-key
+    hit/miss/eviction/build-time counters (:meth:`key_stats`) survive
+    entry eviction, so a serving process churning through thousands of
+    plan structures can still report which keys thrash."""
+
+    def __init__(self, maxsize: Optional[int] = None) -> None:
+        if maxsize is None:
+            import os
+            maxsize = int(os.environ.get(
+                "REPRO_WHOLE_PLAN_CACHE_CAPACITY", 256))
         self.maxsize = int(maxsize)
         self._fns: "OrderedDict[tuple, Callable]" = OrderedDict()
         self._lock = threading.RLock()
-        self.stats = WholePlanCacheStats()
+        self._pending: dict[tuple, threading.Event] = {}
+        self._key_stats: "OrderedDict[str, dict]" = OrderedDict()
+        self.stats = WholePlanCacheStats(capacity=self.maxsize)
+
+    # -- per-key metrics ----------------------------------------------------
+    @staticmethod
+    def key_digest(key: tuple) -> str:
+        """Short stable-within-process label for one structural key."""
+        return format(hash(key) & 0xFFFFFFFFFFFF, "012x")
+
+    def _key_record(self, key: tuple) -> dict:
+        # caller holds the lock
+        digest = self.key_digest(key)
+        rec = self._key_stats.get(digest)
+        if rec is None:
+            rec = {"key": digest, "hits": 0, "misses": 0, "evictions": 0,
+                   "build_time_s": 0.0}
+            self._key_stats[digest] = rec
+            while len(self._key_stats) > KEY_STATS_CAPACITY:
+                self._key_stats.popitem(last=False)
+                self.stats.dropped_keys += 1
+        else:
+            self._key_stats.move_to_end(digest)
+        return rec
+
+    def key_stats(self, top: Optional[int] = None) -> list[dict]:
+        """Per-key counter records, most recently touched last; records
+        outlive their cache entries (eviction is itself a counter)."""
+        with self._lock:
+            recs = [dict(r) for r in self._key_stats.values()]
+        if top is not None:
+            recs = recs[-top:]
+        return recs
+
+    # -- LRU ----------------------------------------------------------------
+    def resize(self, maxsize: int) -> None:
+        """Change the LRU capacity, evicting past the new bound now."""
+        with self._lock:
+            self.maxsize = int(maxsize)
+            self.stats.capacity = self.maxsize
+            self._evict_over_capacity()
+            self.stats.size = len(self._fns)
+
+    def _evict_over_capacity(self) -> None:
+        # caller holds the lock
+        while len(self._fns) > self.maxsize:
+            old_key, _ = self._fns.popitem(last=False)
+            self.stats.evictions += 1
+            self._key_record(old_key)["evictions"] += 1
 
     def get(self, key: tuple) -> Optional[Callable]:
         with self._lock:
@@ -193,22 +287,56 @@ class WholePlanCache:
             if fn is not None:
                 self._fns.move_to_end(key)
                 self.stats.hits += 1
+                self._key_record(key)["hits"] += 1
             return fn
 
     def put(self, key: tuple, fn: Callable, build_s: float) -> None:
         with self._lock:
             self._fns[key] = fn
-            while len(self._fns) > self.maxsize:
-                self._fns.popitem(last=False)
-                self.stats.evictions += 1
+            self._evict_over_capacity()
             self.stats.misses += 1
             self.stats.size = len(self._fns)
             self.stats.build_time_s += build_s
+            rec = self._key_record(key)
+            rec["misses"] += 1
+            rec["build_time_s"] += build_s
+
+    def get_or_create(self, key: tuple, builder: Callable[[], Callable],
+                      extra_build_s: float = 0.0) -> Callable:
+        """Hit, or build exactly once under concurrency: the first thread
+        to miss a key runs ``builder`` (outside the lock) while racing
+        threads block on an in-flight event and then share the built
+        function.  ``extra_build_s`` lets the caller account lowering
+        work done before the key existed (e.g. tracing the plan body)."""
+        while True:
+            with self._lock:
+                fn = self._fns.get(key)
+                if fn is not None:
+                    self._fns.move_to_end(key)
+                    self.stats.hits += 1
+                    self._key_record(key)["hits"] += 1
+                    return fn
+                ev = self._pending.get(key)
+                if ev is None:
+                    ev = threading.Event()
+                    self._pending[key] = ev
+                    break                      # we own the build
+            ev.wait()                          # another thread is building
+        t0 = time.perf_counter()
+        try:
+            fn = builder()
+            self.put(key, fn, time.perf_counter() - t0 + extra_build_s)
+            return fn
+        finally:
+            with self._lock:
+                self._pending.pop(key, None)
+            ev.set()
 
     def clear(self) -> None:
         with self._lock:
             self._fns.clear()
-            self.stats = WholePlanCacheStats()
+            self._key_stats.clear()
+            self.stats = WholePlanCacheStats(capacity=self.maxsize)
 
 
 WHOLE_PLAN_CACHE = WholePlanCache()
@@ -217,12 +345,17 @@ WHOLE_PLAN_CACHE = WholePlanCache()
 def whole_plan_cache_stats() -> WholePlanCacheStats:
     """Snapshot of the whole-plan cache counters (public API): ``hits``
     (a structurally-equal ExecPlan reused an existing staged function —
-    and with it the XLA executable), ``misses`` (staged functions built),
-    ``size``, ``evictions``, and ``build_time_s`` (cumulative staged-
-    lowering time on misses)."""
+    and with it the XLA executable), ``misses`` (staged functions built,
+    concurrent builders coalesced to one build per key), ``size``,
+    ``capacity`` (the configurable LRU bound), ``evictions``,
+    ``build_time_s`` (cumulative staged-lowering time on misses), and
+    ``tracked_keys``/``dropped_keys`` (per-key stat records alive /
+    aged out — see :meth:`WholePlanCache.key_stats`)."""
     with WHOLE_PLAN_CACHE._lock:
         return replace(WHOLE_PLAN_CACHE.stats,
-                       size=len(WHOLE_PLAN_CACHE._fns))
+                       size=len(WHOLE_PLAN_CACHE._fns),
+                       capacity=WHOLE_PLAN_CACHE.maxsize,
+                       tracked_keys=len(WHOLE_PLAN_CACHE._key_stats))
 
 
 # --------------------------------------------------------------------------
@@ -367,6 +500,8 @@ class CompiledPlan:
     #: jitted whole-plan function + its un-jitted trace (introspection)
     _staged_fn: Optional[Callable] = field(default=None, repr=False)
     _staged_raw: Optional[Callable] = field(default=None, repr=False)
+    #: structural whole-plan cache key of the staged lowering
+    _staged_key: Optional[tuple] = field(default=None, repr=False)
     #: mesh-validated SegmentPlans of the staged lowering (real mesh)
     _seg_plans: list = field(default_factory=list, repr=False)
     #: recorded execution downgrades, deduped by (site, reason, specs)
@@ -580,11 +715,35 @@ class CompiledPlan:
 
         key = (tuple(key_parts), tuple(canon[o] for o in output_ids),
                self.pallas)
-        jitted = WHOLE_PLAN_CACHE.get(key)
-        if jitted is None:
-            jitted = jax.jit(plan_fn)
-            WHOLE_PLAN_CACHE.put(key, jitted, time.perf_counter() - t0)
+        self._staged_key = key
+        # build-once under concurrency: racing threads compiling
+        # structurally-equal plans share one jitted function (and with
+        # it one XLA executable per shape signature)
+        jitted = WHOLE_PLAN_CACHE.get_or_create(
+            key, lambda: jax.jit(plan_fn),
+            extra_build_s=time.perf_counter() - t0)
         return jitted, plan_fn
+
+    def batched_callable(self) -> Callable:
+        """Jitted ``vmap`` of the staged whole-plan function over a new
+        leading request axis — the executable the fused-plan server
+        (:mod:`repro.serve.fusion`) dispatches one *batch* of
+        same-structure requests through.  Takes each graph input stacked
+        to ``(B, *shape)`` (``graph.inputs()`` order) and returns every
+        output stacked the same way; batch elements are computed
+        independently (vmap semantics), so the result equals B separate
+        calls.  Mesh-free plans only: ``vmap`` over a ``shard_map``
+        segment is not supported.  Shared across structurally-equal
+        plans via the whole-plan cache (key ``("vmap", staged key)``)."""
+        if _mesh_of(self.layout) is not None:
+            raise PlanInvariantError(
+                "batched_callable: batched (vmapped) execution requires "
+                "a mesh-free plan; this plan was compiled under a layout")
+        import jax
+        _fn, raw = self.staged_callable()
+        key = ("vmap", self._staged_key)
+        return WHOLE_PLAN_CACHE.get_or_create(
+            key, lambda: jax.jit(jax.vmap(raw)))
 
     # -- per-operator fallback path ----------------------------------------
 

@@ -1,1 +1,11 @@
-from .engine import Engine, Request
+from .engine import AdmissionError, Engine, Request
+from .fusion import (FusionServeError, FusionServer, PadReport,
+                     ServerClosedError, pad_safety)
+from .metrics import Reservoir, ServerMetrics, percentiles
+
+__all__ = [
+    "Engine", "Request", "AdmissionError",
+    "FusionServer", "FusionServeError", "ServerClosedError",
+    "PadReport", "pad_safety",
+    "ServerMetrics", "Reservoir", "percentiles",
+]

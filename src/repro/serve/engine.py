@@ -22,6 +22,14 @@ from repro.launch.serve import make_prefill_step, make_serve_step
 from repro.models import LM
 
 
+class AdmissionError(ValueError):
+    """Raised by :meth:`Engine.submit` for requests that can never be
+    served: prompts too long for the KV cache, or ``max_new`` ≤ 0.
+    Admission-checking at submit time keeps the step loop free of
+    per-slot validity cases (an over-long prompt would otherwise prefill
+    past the cache and mis-handle at the first step boundary)."""
+
+
 @dataclass
 class Request:
     prompt: np.ndarray               # (P,) int32
@@ -83,6 +91,21 @@ class Engine:
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
+        """Enqueue ``req`` for the next free slot.  Rejects impossible
+        requests with :class:`AdmissionError` *here* — the decode loop
+        assumes every admitted request fits (``pos < max_len - 1`` must
+        hold after prefill for at least one decode step)."""
+        if req.max_new <= 0:
+            raise AdmissionError(
+                f"max_new must be >= 1, got {req.max_new}")
+        P = len(req.prompt)
+        if P == 0:
+            raise AdmissionError("empty prompt")
+        if P > self.max_len - 1:
+            raise AdmissionError(
+                f"prompt length {P} exceeds the cache budget: max_len="
+                f"{self.max_len} leaves room for at most {self.max_len - 1} "
+                "prompt tokens plus one decode step")
         self._queue.put(req)
 
     def _admit(self) -> None:

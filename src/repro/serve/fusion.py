@@ -1,0 +1,725 @@
+"""Multi-tenant fused-plan serving: async continuous batching over
+compiled whole plans.
+
+The optimizer pays off only when compiled fusion plans are *reused* —
+optimization and codegen cost amortize across invocations (the paper's
+Fig. 11 argument).  :class:`FusionServer` is the traffic-facing form of
+that claim: many concurrent clients submit fused-region invocations
+(``submit(region, args) -> Future``), worker threads drain a shared
+queue, and requests whose plans are structurally equal are executed as
+*one* batched dispatch of the shared staged executable.
+
+Request path::
+
+    submit(region, args)
+      └─ canonicalize operands → shape class (rows padded up to pad_to)
+         └─ route: (region, class) → _PlanEntry  [trace→plan→compile,
+            memoized; structurally-equal plans share one staged fn via
+            the whole-plan cache]
+            └─ enqueue ticket, bucketed by structural plan digest
+    worker: pop head ticket, drain same-bucket tickets (≤ max_batch)
+      └─ zero-pad each request to the bucket's shape class, stack on a
+         new leading axis, ONE call of the jitted vmapped whole-plan fn
+         └─ slice each request's outputs back to its true shape,
+            resolve futures, record latency/occupancy metrics
+
+**Shape bucketing & padding.**  Requests rarely share exact shapes, so
+the leading ("row") dimension is padded up to the next multiple of
+``pad_to`` and requests sharing the padded class batch together.
+Zero-padding is only sound for some plans: a padded row flows through
+``relu(1 - y*(X@w))`` as a garbage-but-confined row (sliced away on
+return), but through ``(...).sum()`` it *pollutes the scalar*.  The
+server runs a static **pad-safety analysis** over the traced HOP DAG —
+propagating "padded rows are zero / finite garbage / possibly non-
+finite" through every operator and rejecting any contraction over the
+padded dimension whose operand is not provably zero (zero rows are
+exact under ``sum``/``sum_sq``/``matmul`` contractions; ``mean``/
+``min``/``max`` over padded rows never are).  Plans that fail the
+analysis degrade to **exact-shape buckets** (only identical shapes
+batch — still one dispatch per batch), recorded as ``pad_fallbacks`` in
+the metrics.  Batch elements are vmapped, therefore independent: the
+batched result equals per-request execution (tested to 1e-5).
+
+**Plan-cache lifecycle.**  Entries are memoized per (region, shape
+class, context); underneath, the bounded LRU
+:class:`~repro.core.codegen.WholePlanCache` shares one jitted function
+across structurally-equal plans and its per-key hit/miss/eviction/
+build-time counters survive entry churn.  ``warm(regions)`` compiles
+(and optionally executes) plans ahead of traffic;
+``FusionServer(plan_cache_capacity=..., whole_plan_cache_capacity=...)``
+bounds both global caches for long-lived processes.
+
+Metrics (:mod:`repro.serve.metrics`): p50/p95/p99 latency, queue depth,
+batch occupancy, per-bucket counters, and cache stats — exported by
+``metrics.snapshot()`` / ``report()``.  The load harness
+(``benchmarks/serving.py``) drives N simulated clients against the
+l2svm/mlogreg scoring regions and records serving throughput and tail
+latency in ``BENCH_fusion.json``.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict, deque
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ir
+from repro.core.api import Compiled, Planned, _canon_shape, _canon_value
+from repro.core.codegen import (PLAN_CACHE, WHOLE_PLAN_CACHE,
+                                WholePlanCache)
+from repro.core.context import FusionContext, current_context
+from repro.kernels.blocksparse import BCSR, DictCompressed
+from .metrics import ServerMetrics
+
+
+class FusionServeError(RuntimeError):
+    """Typed serving error raised at ``submit``/``warm`` time (bad
+    region object, unknown operands, closed server) — requests that
+    cannot be admitted are rejected here, never enqueued."""
+
+
+class ServerClosedError(FusionServeError):
+    """The server has been closed (or has no workers to drain the
+    queue); the request was not enqueued."""
+
+
+# --------------------------------------------------------------------------
+# static pad-safety analysis
+# --------------------------------------------------------------------------
+
+_ZERO, _FIN, _NAN = 0, 1, 2          # padded-slice value severity
+#: unary ops with f(0) finite but nonzero (padded zeros stop being zero)
+_FIN_AT_ZERO = frozenset({"exp", "sigmoid", "softplus"})
+#: unary ops that can turn finite garbage non-finite (domain edges)
+_NAN_RISK = frozenset({"log", "recip", "sqrt", "log1p"})
+
+
+@dataclass(frozen=True)
+class PadReport:
+    """Outcome of the pad-safety analysis for one traced region.
+
+    ``safe`` — zero-padding the marked inputs' leading dimension and
+    slicing every output back is exact; ``out_axes`` — per graph output,
+    the axis carrying the padded dimension (``None``: the output never
+    sees it and is exact as-is); ``reason`` — first violated rule when
+    unsafe (drives the ``pad_fallbacks`` metric)."""
+    safe: bool
+    out_axes: tuple = ()
+    reason: str = ""
+
+
+def pad_safety(graph: ir.Graph, padded_inputs: frozenset) -> PadReport:
+    """Decide whether zero-padding ``padded_inputs`` along axis 0 is
+    exact for every output of ``graph`` (after slicing).
+
+    Per node we track whether it carries the padded dimension (axis 0 or
+    1 — transposes flip it) and what its padded slice provably holds:
+    exactly **zero** (padding survives zero-preserving cell ops and
+    anchors exact ``sum``/``matmul`` contractions), **finite garbage**
+    (confined to the padded rows — safe until contracted), or
+    **possibly non-finite** (``log(0)``, ``x/0`` … — also confined, but
+    poisons any contraction, since ``0 · nan = nan``).  A contraction
+    over the padded dimension (matmul inner dim, ``colsums``, full
+    aggregates) is exact iff one side's padded slice is zero and the
+    other is finite; ``mean``/``min``/``max`` over the padded dimension
+    are never exact.  Anything the table doesn't cover fails closed."""
+    state: dict[int, Optional[tuple[int, int]]] = {}
+
+    def unsafe(node: ir.Node, why: str) -> PadReport:
+        return PadReport(False, (),
+                         f"%{node.nid} {node.op}: {why}")
+
+    def fin(s) -> bool:          # finite padded slice (or real data)
+        return s is None or s[1] <= _FIN
+
+    for node in graph.nodes:
+        op, ins = node.op, node.inputs
+        sts = [state.get(i.nid) for i in ins]
+        if op == "input":
+            state[node.nid] = (0, _ZERO) if node.name in padded_inputs \
+                else None
+            continue
+        if op == "lit":
+            state[node.nid] = None
+            continue
+        if all(s is None for s in sts):
+            state[node.nid] = None
+            continue
+        if op == "t":
+            ax, sev = sts[0]
+            state[node.nid] = (1 - ax, sev)
+        elif op == "idx":
+            if sts[0][0] == 1:
+                return unsafe(node, "column slice of the padded axis")
+            state[node.nid] = sts[0]
+        elif op == "matmul":
+            sa, sb = sts[0], sts[1]
+            ta, tb = node.ta, node.tb
+            a_contract = sa is not None and sa[0] == (0 if ta else 1)
+            b_contract = sb is not None and sb[0] == (1 if tb else 0)
+            if a_contract or b_contract:
+                a_zero = a_contract and sa[1] == _ZERO
+                b_zero = b_contract and sb[1] == _ZERO
+                if not ((a_zero and fin(sb)) or (b_zero and fin(sa))):
+                    return unsafe(node, "contraction over the padded "
+                                        "dimension of a non-zero operand")
+            row_pad = sa is not None and sa[0] == (1 if ta else 0)
+            col_pad = sb is not None and sb[0] == (0 if tb else 1)
+            if row_pad and col_pad:
+                return unsafe(node, "both result axes would be padded")
+            if not row_pad and not col_pad:
+                state[node.nid] = None          # contracted away: exact
+            else:
+                src = sa if row_pad else sb
+                sev = _NAN if any(s is not None and s[1] == _NAN
+                                  for s in sts) else \
+                    (_ZERO if src[1] == _ZERO else _FIN)
+                state[node.nid] = (0 if row_pad else 1, sev)
+        elif node.op in ir.AGG_OPS and "axis" in node.attrs:
+            s = sts[0]
+            reduced = {"full": (0, 1), "row": (1,), "col": (0,)}[
+                node.attrs["axis"]]
+            if s[0] in reduced:
+                if op in ("sum", "sum_sq") and s[1] == _ZERO:
+                    state[node.nid] = None      # zeros add nothing: exact
+                else:
+                    return unsafe(node, f"{op} over the padded dimension "
+                                        "of a non-zero operand")
+            else:
+                state[node.nid] = s             # row-local: confined
+        elif op in ir.UNARY_OPS:
+            ax, sev = sts[0]
+            if sev == _ZERO:
+                sev = _ZERO if op in ir.SPARSE_SAFE_UNARY else \
+                    (_FIN if op in _FIN_AT_ZERO else _NAN)
+            elif sev == _FIN and op in _NAN_RISK:
+                sev = _NAN
+            state[node.nid] = (ax, sev)
+        elif op in ir.BINARY_OPS:
+            axes = {s[0] for s in sts if s is not None}
+            if len(axes) != 1:
+                return unsafe(node, "operands carry different padded axes")
+            ax = axes.pop()
+            sevs = [s[1] if s is not None else None for s in sts]
+            if op in ("eq", "neq", "lt", "le", "gt", "ge"):
+                sev = _FIN                       # 0/1 output
+            elif op == "mul":
+                if (sevs[0] == _ZERO and fin(sts[1])) or \
+                        (sevs[1] == _ZERO and fin(sts[0])):
+                    sev = _ZERO
+                elif _NAN in sevs:
+                    sev = _NAN
+                else:
+                    sev = _FIN
+            elif op in ("div", "pow"):
+                sev = _NAN                       # 0/0, x/0, 0**-1 …
+            else:                                # add/sub/min/max
+                if sevs[0] == _ZERO and sevs[1] == _ZERO:
+                    sev = _ZERO
+                else:
+                    sev = _NAN if _NAN in sevs else _FIN
+            state[node.nid] = (ax, sev)
+        elif op in ir.TERNARY_OPS:
+            axes = {s[0] for s in sts if s is not None}
+            if len(axes) != 1:
+                return unsafe(node, "operands carry different padded axes")
+            sev = _NAN if any(s is not None and s[1] == _NAN
+                              for s in sts) else _FIN
+            state[node.nid] = (axes.pop(), sev)
+        else:                                    # diagv, unknown ops
+            return unsafe(node, "no padding rule for this operator")
+
+    out_axes = tuple(state[o.nid][0] if state.get(o.nid) is not None
+                     else None for o in graph.outputs)
+    return PadReport(True, out_axes)
+
+
+# --------------------------------------------------------------------------
+# shape classes
+# --------------------------------------------------------------------------
+
+def _shape_class(shapes: dict[str, tuple[int, int]],
+                 pad_to: int) -> Optional[tuple[dict, frozenset, int]]:
+    """Padded shape class for one request's canonical operand shapes.
+
+    The "batch rows" dimension ``m`` is the largest leading dimension
+    that does **not** also appear as any operand's column dimension —
+    column dimensions are feature/contraction axes (``w`` in
+    ``hinge(X(m,64), w(64,1), y(m,1))`` leads with the feature dim 64;
+    excluding column dims picks ``m`` rows, not features).  ``m``
+    rounds up to the next multiple of ``pad_to`` and every operand led
+    by ``m`` pads with it.  Returns ``(padded shapes, padded operand
+    names, m)``, or None when no unambiguous batch dimension exists
+    (all leading dims ≤ 1 or double as column dims — e.g. square
+    matrices); those requests batch only with exact shape twins."""
+    if pad_to <= 1 or not shapes:
+        return None
+    col_dims = {c for _r, c in shapes.values()}
+    cands = {r for r, _c in shapes.values() if r > 1 and r not in col_dims}
+    if not cands:
+        return None
+    m = max(cands)
+    big = -(-m // pad_to) * pad_to
+    padded = {n: ((big, c) if r == m else (r, c))
+              for n, (r, c) in shapes.items()}
+    names = frozenset(n for n, (r, _c) in shapes.items() if r == m)
+    return padded, names, m
+
+
+def _pow2_at_least(n: int, cap: int) -> int:
+    b = 1
+    while b < n:
+        b <<= 1
+    return min(b, cap)
+
+
+def _uncanon_np(v: np.ndarray):
+    """Host-side half of the canonicalization round-trip (mirrors
+    ``repro.core.api._uncanon_output`` for NumPy results): (n, 1)
+    columns → 1-D, (1, 1) → 0-D."""
+    if v.shape == (1, 1):
+        return v.reshape(())
+    if v.ndim == 2 and v.shape[1] == 1:
+        return v.reshape(-1)
+    return v
+
+
+# --------------------------------------------------------------------------
+# entries & tickets
+# --------------------------------------------------------------------------
+
+@dataclass
+class _PlanEntry:
+    """One compiled (region × shape class × context) unit: the batching
+    currency.  ``digest`` is the structural whole-plan signature —
+    entries from *different* region objects with equal digests land in
+    the same batch bucket and share one jitted executable."""
+    label: str
+    compiled: Compiled
+    planned: Planned
+    call_order: list[str]
+    class_shapes: dict[str, tuple[int, int]]
+    padded_names: frozenset
+    out_axes: tuple
+    n_outputs: int
+    batchable: bool
+    digest: str
+    pad_safe: bool
+    batched_fn: Optional[object] = field(default=None, repr=False)
+
+    @property
+    def bucket_key(self) -> tuple:
+        # unbatchable entries never co-batch: bucket by identity
+        return ("plan", self.digest, tuple(sorted(self.class_shapes.items()))) \
+            if self.batchable else ("entry", id(self))
+
+
+@dataclass
+class _Ticket:
+    entry: _PlanEntry
+    pos: list                      # canonical arrays, call_order, unpadded
+    kw: dict                       # original operands (unbatchable path)
+    m: int                         # true leading dim (0: nothing padded)
+    padded: bool
+    vector_world: bool
+    future: Future
+    t_submit: float
+
+
+# --------------------------------------------------------------------------
+# the server
+# --------------------------------------------------------------------------
+
+class FusionServer:
+    """Async multi-tenant server over compiled fused plans.
+
+    Parameters
+    ----------
+    workers
+        Queue-draining threads.  JAX releases the GIL inside XLA
+        executions, so >1 worker overlaps independent buckets.
+        ``workers=0`` builds a warm-only server (``warm()`` /
+        ``warmed_plans()`` work; ``submit`` raises).
+    max_batch
+        Requests per batched dispatch.  Batch sizes are padded up to
+        powers of two (≤ ``max_batch``) so the vmapped executable
+        compiles O(log max_batch) shapes per bucket, not one per
+        occupancy.  ``max_batch=1`` is the per-request-dispatch
+        baseline the load harness compares against.
+    pad_to
+        Leading-dimension quantum of the shape classes (`0`/`1`
+        disables padding: only exact shapes batch).
+    context
+        :class:`FusionContext` every request plans under (default: the
+        scoped context at construction).  Layout-bearing contexts and
+        sparse operands are served unbatched (vmap cannot cross
+        ``shard_map``).
+    plan_cache_capacity / whole_plan_cache_capacity
+        Optional resize of the two global LRU plan caches — the
+        lifecycle knob for long-lived processes churning through many
+        plan structures.
+    """
+
+    def __init__(self, *, workers: int = 2, max_batch: int = 16,
+                 pad_to: int = 64, context: Optional[FusionContext] = None,
+                 plan_cache_capacity: Optional[int] = None,
+                 whole_plan_cache_capacity: Optional[int] = None,
+                 autostart: bool = True):
+        self.workers = int(workers)
+        self.max_batch = max(1, int(max_batch))
+        self.pad_to = max(0, int(pad_to))
+        self._ctx = context if context is not None else current_context()
+        if plan_cache_capacity is not None:
+            PLAN_CACHE.resize(plan_cache_capacity)
+        if whole_plan_cache_capacity is not None:
+            WHOLE_PLAN_CACHE.resize(whole_plan_cache_capacity)
+        self.metrics = ServerMetrics()
+        self._queue: "deque[_Ticket]" = deque()
+        self._cv = threading.Condition()
+        self._stop = False
+        self._closed = False
+        self._entry_lock = threading.RLock()
+        self._entries: "OrderedDict[tuple, _PlanEntry]" = OrderedDict()
+        self._routes: "OrderedDict[tuple, tuple]" = OrderedDict()
+        self._threads: list[threading.Thread] = []
+        self._started = False
+        if autostart and self.workers > 0:
+            self.start()
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> None:
+        """Spin up the worker threads (idempotent)."""
+        if self._started or self.workers <= 0:
+            return
+        self._started = True
+        for i in range(self.workers):
+            t = threading.Thread(target=self._worker_loop,
+                                 name=f"fusion-serve-{i}", daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def close(self, timeout: float = 10.0) -> None:
+        """Drain the queue, stop the workers, reject new submissions."""
+        with self._cv:
+            self._closed = True
+            self._stop = True
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join(timeout=timeout)
+        self._threads = []
+
+    def __enter__(self) -> "FusionServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, region, *args, **kwargs) -> Future:
+        """Enqueue one invocation of ``region`` (a ``fused`` wrapper) on
+        the given operands; returns a :class:`concurrent.futures.Future`
+        resolving to the same values and shapes ``region(*args,
+        **kwargs)`` would return (same 1-D/0-D canonicalization
+        round-trip), materialized as host NumPy arrays — results cross
+        the batch boundary through the host anyway, and re-wrapping each
+        request's slice as a device array would cost one dispatch per
+        request, which is exactly the overhead batching exists to
+        amortize.  Typed :class:`FusionServeError`\\ s are raised *here*
+        — a request that cannot be served is never enqueued."""
+        if self._closed:
+            self.metrics.on_reject()
+            raise ServerClosedError("submit on a closed FusionServer")
+        if not self._started:
+            self.metrics.on_reject()
+            raise ServerClosedError(
+                "FusionServer has no running workers (workers=0 or not "
+                "started); call start() or construct with autostart=True")
+        names = getattr(region, "names", None)
+        if names is None or not hasattr(region, "trace"):
+            self.metrics.on_reject()
+            raise FusionServeError(
+                f"submit expects a fused region (repro.core.Fused), got "
+                f"{type(region).__name__}")
+        bound = dict(zip(names, args))
+        bound.update(kwargs)
+        if set(bound) != set(names):
+            self.metrics.on_reject()
+            missing = set(names) - set(bound)
+            extra = set(bound) - set(names)
+            raise FusionServeError(
+                f"operands do not match region signature {names}: "
+                f"missing {sorted(missing)}, unexpected {sorted(extra)}")
+        try:
+            shapes = {n: _canon_shape(n, v)[0] for n, v in bound.items()}
+            vector_world = any(_canon_shape(n, v)[1] < 2
+                               for n, v in bound.items())
+        except TypeError as e:          # FusionInputError subclasses this
+            self.metrics.on_reject()
+            raise FusionServeError(str(e)) from e
+        entry, m, was_padded = self._route(region, bound, shapes)
+        if entry.batchable:
+            # materialize host copies here, in the client's thread —
+            # worker time is the serving bottleneck, submit time is not
+            pos = [np.asarray(_canon_value(n, bound[n]), np.float32)
+                   for n in entry.call_order]
+        else:
+            pos = []
+        ticket = _Ticket(entry=entry, pos=pos, kw=bound, m=m,
+                         padded=was_padded, vector_world=vector_world,
+                         future=Future(), t_submit=time.perf_counter())
+        with self._cv:
+            self._queue.append(ticket)
+            depth = len(self._queue)
+            self._cv.notify()
+        self.metrics.on_submit(depth)
+        return ticket.future
+
+    # -- routing: request shapes → compiled entry ----------------------------
+    def _route(self, region, bound: dict,
+               shapes: dict) -> tuple[_PlanEntry, int, bool]:
+        fmts = tuple(
+            "bcsr" if isinstance(bound[n], BCSR) else
+            "dict" if isinstance(bound[n], DictCompressed) else "dense"
+            for n in region.names)
+        rkey = (id(region), tuple(shapes[n] for n in region.names), fmts,
+                self._ctx.key())
+        with self._entry_lock:
+            hit = self._routes.get(rkey)
+            if hit is not None:
+                self._routes.move_to_end(rkey)
+                return hit
+            route = self._build_route(region, bound, shapes, fmts)
+            self._routes[rkey] = route
+            while len(self._routes) > 4096:
+                self._routes.popitem(last=False)
+            return route
+
+    def _build_route(self, region, bound, shapes, fmts):
+        batchable = (self._ctx.layout is None
+                     and all(f == "dense" for f in fmts)
+                     and self.max_batch > 1)
+        cls = _shape_class(shapes, self.pad_to) if batchable else None
+        pad_fallback = False
+        if cls is not None:
+            padded_shapes, padded_names, _m = cls
+            # always analyze: a boundary-exact request (padding a no-op
+            # for it) still joins a class that later requests pad into
+            try:
+                traced = region.trace(**{
+                    n: jax.ShapeDtypeStruct(padded_shapes[n], jnp.float32)
+                    for n in region.names})
+                report = pad_safety(traced.graph, padded_names)
+            except Exception:       # padding broke trace-time shape rules
+                report = PadReport(False, (), "trace failed at padded shapes")
+            if not report.safe:
+                pad_fallback = True
+                cls = None
+        if cls is not None:
+            class_shapes, padded_names, m = cls
+        else:
+            class_shapes, padded_names, m = dict(shapes), frozenset(), 0
+        entry = self._entry(region, bound, class_shapes, padded_names,
+                            fmts, batchable, pad_fallback)
+        was_padded = bool(padded_names) and class_shapes != shapes
+        return entry, m, was_padded
+
+    def _entry(self, region, bound, class_shapes, padded_names, fmts,
+               batchable, pad_fallback) -> _PlanEntry:
+        ekey = (id(region), tuple(sorted(class_shapes.items())), fmts,
+                self._ctx.key())
+        hit = self._entries.get(ekey)
+        if hit is not None:
+            return hit
+        t0 = time.perf_counter()
+        operands = {}
+        for n in region.names:
+            v = bound[n]
+            if isinstance(v, (BCSR, DictCompressed)):
+                operands[n] = v              # trace reads shape + density
+            else:
+                operands[n] = jax.ShapeDtypeStruct(class_shapes[n],
+                                                   jnp.float32)
+        traced = region.trace(**operands)
+        planned = traced.plan(context=self._ctx)
+        compiled = planned.compile()
+        if padded_names:
+            report = pad_safety(traced.graph, padded_names)
+            assert report.safe, "pad-checked class re-verified unsafe"
+            out_axes = report.out_axes
+        else:
+            out_axes = tuple(None for _ in traced.graph.outputs)
+        digest = WholePlanCache.key_digest(compiled.plan_key())
+        name = getattr(region.fn, "__name__", "<expr>")
+        dims = "/".join(f"{r}x{c}" for r, c in
+                        (class_shapes[n] for n in region.names))
+        entry = _PlanEntry(
+            label=f"{name}[{dims}]", compiled=compiled, planned=planned,
+            call_order=compiled.input_order, class_shapes=class_shapes,
+            padded_names=padded_names, out_axes=out_axes,
+            n_outputs=len(traced.graph.outputs), batchable=batchable,
+            digest=digest, pad_safe=not pad_fallback)
+        if batchable:
+            entry.batched_fn = compiled.batched()
+        self._entries[ekey] = entry
+        self.metrics.on_compile(digest, time.perf_counter() - t0,
+                                pad_fallback=pad_fallback)
+        return entry
+
+    # -- warming -------------------------------------------------------------
+    def warm(self, regions, execute: bool = True,
+             batch_sizes: tuple = (1,)) -> dict:
+        """Compile plans ahead of traffic.  ``regions`` is an iterable of
+        ``(region, operands)`` pairs — operands as arrays or
+        ``ShapeDtypeStruct``\\ s (each distinct shape class to serve
+        should be warmed).  ``execute=True`` additionally runs each
+        entry on zeros — batchable entries once per batch size in
+        ``batch_sizes`` (the vmapped executable compiles per
+        power-of-two batch class; warming ``(1, 2, ..., max_batch)``
+        keeps every XLA build out of the serving path), unbatchable
+        entries once through the plain compiled call.  Returns a
+        warming report (per-entry label/digest + cache stats)."""
+        rows = []
+        for region, operands in regions:
+            names = getattr(region, "names", None)
+            if names is None or set(operands) != set(names):
+                raise FusionServeError(
+                    f"warm: operands do not match region signature {names}")
+            shapes = {n: _canon_shape(n, v)[0]
+                      for n, v in operands.items()}
+            entry, _m, _p = self._route(region, operands, shapes)
+            block = lambda o: jax.tree_util.tree_map(
+                lambda a: a.block_until_ready()
+                if hasattr(a, "block_until_ready") else a, o)
+            if execute and entry.batchable:
+                for b in batch_sizes:
+                    bc = _pow2_at_least(int(b), self.max_batch)
+                    zeros = [jnp.zeros((bc,) + tuple(entry.class_shapes[n]),
+                                       jnp.float32)
+                             for n in entry.call_order]
+                    block(entry.batched_fn(*zeros))
+            elif execute and not any(
+                    isinstance(v, (BCSR, DictCompressed))
+                    for v in operands.values()):
+                zeros = {n: jnp.zeros(entry.class_shapes[n], jnp.float32)
+                         for n in entry.call_order}
+                block(entry.compiled(**zeros))
+            rows.append({"label": entry.label, "digest": entry.digest,
+                         "batchable": entry.batchable,
+                         "pad_safe": entry.pad_safe})
+        from dataclasses import asdict
+        from repro.core import whole_plan_cache_stats
+        return {"entries": rows,
+                "whole_plan_cache": asdict(whole_plan_cache_stats())}
+
+    def warmed_plans(self) -> list[tuple[str, Planned]]:
+        """(label, Planned) for every compiled entry — the hook
+        ``tools/fusionlint.py --serving`` uses to strict-verify exactly
+        the plans the serving path executes."""
+        with self._entry_lock:
+            return [(e.label, e.planned) for e in self._entries.values()]
+
+    # -- worker --------------------------------------------------------------
+    def _worker_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._queue and not self._stop:
+                    self._cv.wait(timeout=0.1)
+                if not self._queue:
+                    if self._stop:
+                        return
+                    continue
+                head = self._queue.popleft()
+                batch = [head]
+                if self.max_batch > 1:
+                    rest: "deque[_Ticket]" = deque()
+                    bk = head.entry.bucket_key
+                    while self._queue:
+                        t = self._queue.popleft()
+                        if len(batch) < self.max_batch and \
+                                t.entry.bucket_key == bk:
+                            batch.append(t)
+                        else:
+                            rest.append(t)
+                    self._queue.extend(rest)
+                depth = len(self._queue)
+            self._execute(batch, depth)
+
+    def _execute(self, batch: list[_Ticket], depth: int) -> None:
+        entry = batch[0].entry
+        try:
+            if entry.batchable:
+                per = self._run_batched(entry, batch)
+            else:
+                per = [self._run_single(t) for t in batch]
+            now = time.perf_counter()
+            lats = []
+            for t, outs in zip(batch, per):
+                t.future.set_result(outs)
+                lats.append((now - t.t_submit) * 1e6)
+            self.metrics.on_batch(
+                entry.digest, len(batch),
+                sum(1 for t in batch if t.padded), lats, depth)
+        except Exception as e:            # noqa: BLE001 - resolve futures
+            for t in batch:
+                if not t.future.done():
+                    t.future.set_exception(e)
+            self.metrics.on_batch(entry.digest, len(batch), 0, [], depth,
+                                  failed=True)
+
+    def _run_batched(self, entry: _PlanEntry,
+                     batch: list[_Ticket]) -> list:
+        # Marshalling runs in NumPy on purpose: per-request jnp.pad/
+        # jnp.stack/slice would issue ~4 small XLA dispatches per
+        # request — more than the batching saves.  One zero-filled host
+        # buffer per operand (zero fill IS the padding) and a single
+        # device transfer keeps the worker at O(#operands) dispatches
+        # per batch regardless of occupancy.
+        B = len(batch)
+        Bc = _pow2_at_least(B, self.max_batch)
+        stacked = []
+        for i, name in enumerate(entry.call_order):
+            r, c = entry.class_shapes[name]
+            buf = np.empty((Bc, r, c), np.float32)
+            for j, t in enumerate(batch):
+                v = t.pos[i]
+                vr, vc = v.shape
+                buf[j, :vr, :vc] = v
+                if vr < r:
+                    buf[j, vr:, :] = 0.0     # the zero fill IS the padding
+                if vc < c:
+                    buf[j, :vr, vc:] = 0.0
+            if Bc > B:                       # batch-axis padding
+                buf[B:] = buf[0]
+            stacked.append(buf)              # jit device_puts once per arg
+        outs = entry.batched_fn(*stacked)
+        outs_np = [np.asarray(outs[k]) for k in range(entry.n_outputs)]
+        per = []
+        for j, t in enumerate(batch):
+            vals = []
+            for k in range(entry.n_outputs):
+                v = outs_np[k][j]
+                ax = entry.out_axes[k]
+                if ax == 0 and t.m and v.shape[0] != t.m:
+                    v = v[:t.m]
+                elif ax == 1 and t.m and v.shape[1] != t.m:
+                    v = v[:, :t.m]
+                vals.append(_uncanon_np(v) if t.vector_world else v)
+            per.append(vals[0] if len(vals) == 1 else tuple(vals))
+        return per
+
+    @staticmethod
+    def _run_single(t: _Ticket):
+        # unbatchable (sparse / layout) path: the Compiled call handles
+        # canonicalization, layout constraints, and the round-trip
+        # itself; results land on the host like the batched path's
+        out = t.entry.compiled(**t.kw)
+        if isinstance(out, tuple):
+            return tuple(np.asarray(o) for o in out)
+        return np.asarray(out)

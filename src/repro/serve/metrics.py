@@ -1,0 +1,220 @@
+"""Serving metrics: latency percentiles, queue depth, batch occupancy,
+and plan-cache snapshots for the fused-plan server.
+
+Everything here is plain-python and thread-safe: worker threads record
+per-request latencies and per-batch occupancy into bounded reservoirs
+(ring buffers — a long-lived server must not accumulate unbounded
+history), and :meth:`ServerMetrics.snapshot` exports the whole state as
+a JSON-able dict.  :meth:`ServerMetrics.report` is the ``explain()``-
+style nested report the load harness prints and ``BENCH_fusion.json``
+derives its serving rows from.
+
+Glossary (the keys ``snapshot()`` exports):
+
+``requests``
+    ``submitted`` / ``completed`` / ``failed`` (worker raised; the
+    error is also set on the request future) / ``rejected`` (typed
+    admission error at ``submit`` time — never enqueued).
+``latency_us``
+    Submit-to-result wall latency percentiles (``p50``/``p95``/``p99``),
+    mean, and the reservoir count they were computed over.
+``batches``
+    ``count`` (batched dispatches), ``batched_requests`` (requests that
+    shared a dispatch with at least one other), ``padded_requests``
+    (requests zero-padded up to their shape class), ``occupancy_mean`` /
+    ``occupancy_max`` (requests per batch), ``pad_fallbacks`` (buckets
+    that degraded to exact-shape batching because padding was proven
+    unsafe for the plan's outputs).
+``queue``
+    Current depth and the high-water mark.
+``buckets``
+    Per-bucket counters keyed by the structural plan digest: requests,
+    batches, compiles and compile seconds.
+``cache``
+    :func:`repro.core.plan_cache_stats` and
+    :func:`repro.core.whole_plan_cache_stats` snapshots (hit/miss/
+    eviction/capacity/build-time), i.e. plan-cache lifecycle under
+    churn.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict, deque
+from dataclasses import asdict
+from typing import Iterable, Optional
+
+import numpy as np
+
+#: bounded history kept per reservoir (latencies, occupancies)
+RESERVOIR_SIZE = 8192
+#: per-bucket counter records kept (LRU past this; drops are counted)
+BUCKET_STATS_CAPACITY = 1024
+
+
+def percentiles(values: Iterable[float],
+                qs: tuple[float, ...] = (50.0, 95.0, 99.0)) -> dict:
+    """``{"p50": ..., "p95": ..., "p99": ...}`` over ``values`` (empty
+    input yields zeros) — shared by the metrics layer and the load
+    harness so both report identical definitions."""
+    vals = np.asarray(list(values), dtype=np.float64)
+    if vals.size == 0:
+        return {f"p{q:g}": 0.0 for q in qs}
+    return {f"p{q:g}": float(np.percentile(vals, q)) for q in qs}
+
+
+class Reservoir:
+    """Bounded, thread-compatible sample window (ring buffer)."""
+
+    def __init__(self, size: int = RESERVOIR_SIZE) -> None:
+        self._ring: "deque[float]" = deque(maxlen=size)
+        self.count = 0            # total ever recorded (not just retained)
+
+    def add(self, value: float) -> None:
+        self._ring.append(float(value))
+        self.count += 1
+
+    def values(self) -> list[float]:
+        return list(self._ring)
+
+    def summary(self, qs: tuple[float, ...] = (50.0, 95.0, 99.0)) -> dict:
+        vals = self.values()
+        out = percentiles(vals, qs)
+        out["mean"] = float(np.mean(vals)) if vals else 0.0
+        out["max"] = float(np.max(vals)) if vals else 0.0
+        out["count"] = self.count
+        return out
+
+
+class ServerMetrics:
+    """Thread-safe counters + reservoirs for one :class:`FusionServer`."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.submitted = 0
+        self.completed = 0
+        self.failed = 0
+        self.rejected = 0
+        self.batches = 0
+        self.batched_requests = 0
+        self.padded_requests = 0
+        self.pad_fallbacks = 0
+        self.compiles = 0
+        self.compile_time_s = 0.0
+        self.queue_depth = 0
+        self.peak_queue_depth = 0
+        self.latency_us = Reservoir()
+        self.occupancy = Reservoir()
+        self._buckets: "OrderedDict[str, dict]" = OrderedDict()
+        self.dropped_buckets = 0
+
+    # -- recording (called by the server) ------------------------------------
+    def on_submit(self, depth: int) -> None:
+        with self._lock:
+            self.submitted += 1
+            self.queue_depth = depth
+            self.peak_queue_depth = max(self.peak_queue_depth, depth)
+
+    def on_reject(self) -> None:
+        with self._lock:
+            self.rejected += 1
+
+    def on_compile(self, bucket: str, seconds: float,
+                   pad_fallback: bool = False) -> None:
+        with self._lock:
+            self.compiles += 1
+            self.compile_time_s += seconds
+            if pad_fallback:
+                self.pad_fallbacks += 1
+            rec = self._bucket(bucket)
+            rec["compiles"] += 1
+            rec["compile_time_s"] += seconds
+
+    def on_batch(self, bucket: str, size: int, padded: int,
+                 latencies_us: list[float], depth: int,
+                 failed: bool = False) -> None:
+        with self._lock:
+            self.batches += 1
+            self.occupancy.add(size)
+            self.queue_depth = depth
+            if size > 1:
+                self.batched_requests += size
+            self.padded_requests += padded
+            if failed:
+                self.failed += size
+            else:
+                self.completed += size
+                for lat in latencies_us:
+                    self.latency_us.add(lat)
+            rec = self._bucket(bucket)
+            rec["requests"] += size
+            rec["batches"] += 1
+
+    def _bucket(self, key: str) -> dict:
+        rec = self._buckets.get(key)
+        if rec is None:
+            rec = {"bucket": key, "requests": 0, "batches": 0,
+                   "compiles": 0, "compile_time_s": 0.0}
+            self._buckets[key] = rec
+            while len(self._buckets) > BUCKET_STATS_CAPACITY:
+                self._buckets.popitem(last=False)
+                self.dropped_buckets += 1
+        else:
+            self._buckets.move_to_end(key)
+        return rec
+
+    # -- export ---------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """JSON-able state dump (see the module docstring's glossary)."""
+        from repro.core import plan_cache_stats, whole_plan_cache_stats
+        with self._lock:
+            occ = self.occupancy.summary(qs=(50.0,))
+            snap = {
+                "requests": {
+                    "submitted": self.submitted,
+                    "completed": self.completed,
+                    "failed": self.failed,
+                    "rejected": self.rejected,
+                },
+                "latency_us": self.latency_us.summary(),
+                "batches": {
+                    "count": self.batches,
+                    "batched_requests": self.batched_requests,
+                    "padded_requests": self.padded_requests,
+                    "occupancy_mean": occ["mean"],
+                    "occupancy_max": occ["max"],
+                    "pad_fallbacks": self.pad_fallbacks,
+                },
+                "queue": {
+                    "depth": self.queue_depth,
+                    "peak_depth": self.peak_queue_depth,
+                },
+                "compiles": {
+                    "count": self.compiles,
+                    "time_s": round(self.compile_time_s, 6),
+                },
+                "buckets": [dict(r) for r in self._buckets.values()],
+                "dropped_buckets": self.dropped_buckets,
+            }
+        snap["cache"] = {
+            "plan": asdict(plan_cache_stats()),
+            "whole_plan": asdict(whole_plan_cache_stats()),
+        }
+        return snap
+
+    def report(self, server: Optional[object] = None,
+               top_keys: int = 8) -> dict:
+        """``explain()``-style report: the snapshot plus the server's
+        configuration and the hottest whole-plan cache keys."""
+        from repro.core.codegen import WHOLE_PLAN_CACHE
+        doc = {"serving": self.snapshot()}
+        if server is not None:
+            doc["server"] = {
+                "workers": getattr(server, "workers", None),
+                "max_batch": getattr(server, "max_batch", None),
+                "pad_to": getattr(server, "pad_to", None),
+                "entries": len(getattr(server, "_entries", ()) or ()),
+            }
+        doc["serving"]["cache"]["whole_plan_keys"] = \
+            WHOLE_PLAN_CACHE.key_stats(top=top_keys)
+        return doc

@@ -35,3 +35,17 @@ def test_readme_quickstart_runs_verbatim():
     assert "trace" in snippet and "plan" in snippet and "compile" in snippet
     res = checker.run_quickstart()
     assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_readme_ci_snippets_discovered():
+    names = _load_checker().snippet_names()
+    assert "quickstart" in names
+    assert "serving" in names
+
+
+def test_readme_serving_snippet_runs_verbatim():
+    checker = _load_checker()
+    snippet = checker.ci_snippet("serving")
+    assert "FusionServer" in snippet and "submit" in snippet
+    res = checker.run_snippet("serving")
+    assert res.returncode == 0, res.stdout + res.stderr

@@ -1,14 +1,20 @@
 """Plan-cache hardening: thread-safety, LRU bounds, public stats, and the
 positional re-binding path (a cached operator serving a structurally-equal
-plan from a *different* graph with different node ids)."""
+plan from a *different* graph with different node ids).  The second half
+covers the whole-plan cache lifecycle (bounded LRU, per-key stats that
+survive eviction, build-once under concurrency) and hammers the full
+staged pipeline — Traced.plan() / Planned.compile() / execution — from
+many threads at once."""
 
 import threading
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fused, fusion_mode, plan_cache_stats
-from repro.core.codegen import PLAN_CACHE, PlanCache
+from repro.core import (fused, fusion_mode, plan_cache_stats,
+                        whole_plan_cache_stats)
+from repro.core.codegen import (PLAN_CACHE, WHOLE_PLAN_CACHE, PlanCache,
+                                WholePlanCache)
 
 rng = np.random.default_rng(3)
 
@@ -88,6 +94,141 @@ def test_get_or_build_thread_safe():
     # 8 distinct operators built exactly once despite 8 racing threads
     assert cache.stats.misses == 8
     assert cache.stats.hits == 8 * 8 - 8
+
+
+def test_plan_cache_capacity_resize_and_eviction_stats():
+    """The LRU bound is a public, adjustable stat: resize() evicts past
+    the new bound immediately and the snapshot exposes it."""
+    cache = PlanCache(maxsize=8)
+    from repro.core import ir
+    from repro.core.select import plan as plan_graph
+    for i in range(6):
+        X = ir.matrix("X", (8 + i, 4))
+        g = ir.Graph.build([(X * 2.0).sum()])
+        for spec in plan_graph(g, "gen").fused_specs():
+            cache.get_or_build(g, spec)
+    assert cache.stats.capacity == 8 and cache.stats.evictions == 0
+    cache.resize(2)
+    assert cache.stats.capacity == 2
+    assert len(cache) <= 2
+    assert cache.stats.evictions >= 4
+    assert cache.stats.size == len(cache)
+
+
+def test_whole_plan_cache_lru_and_key_stats_survive_eviction():
+    """Bounded LRU over jitted whole-plan functions; the per-key
+    hit/miss/eviction counters must outlive the evicted entries."""
+    cache = WholePlanCache(maxsize=2)
+    fns = {}
+    for i in range(4):
+        key = ("plan", i)
+        fns[i] = cache.get_or_create(key, lambda i=i: (lambda: i))
+    assert cache.stats.misses == 4
+    assert cache.stats.size <= 2 and cache.stats.capacity == 2
+    assert cache.stats.evictions == 2
+    # evicted key: its stat record survives and charges the rebuild
+    rebuilt = cache.get_or_create(("plan", 0), lambda: (lambda: "new"))
+    assert rebuilt is not fns[0]
+    recs = {r["key"]: r for r in cache.key_stats()}
+    d0 = WholePlanCache.key_digest(("plan", 0))
+    assert recs[d0]["misses"] == 2 and recs[d0]["evictions"] == 1
+    # live key: hit returns the identical function object
+    key3 = ("plan", 3)
+    assert cache.get_or_create(key3, lambda: None) is fns[3]
+    assert recs != {} and cache.stats.hits == 1
+    cache.resize(1)
+    assert cache.stats.capacity == 1 and cache.stats.size <= 1
+
+
+def test_whole_plan_get_or_create_builds_once_under_race():
+    """16 threads miss the same key simultaneously: exactly one builder
+    runs; the rest wait on the in-flight event and share its result."""
+    cache = WholePlanCache(maxsize=16)
+    barrier = threading.Barrier(16)
+    builds = []
+    results = []
+
+    def builder():
+        builds.append(1)
+        return lambda: "built"
+
+    def worker():
+        barrier.wait()
+        results.append(cache.get_or_create(("hot", "key"), builder))
+
+    threads = [threading.Thread(target=worker) for _ in range(16)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(builds) == 1
+    assert len(set(map(id, results))) == 1      # one shared function
+    assert cache.stats.misses == 1 and cache.stats.hits == 15
+
+
+def test_staged_pipeline_thread_hammer_no_duplicate_compiles():
+    """≥8 threads hammer the full staged pipeline — trace → plan →
+    compile → execute — over identical AND distinct regions.  Each
+    distinct plan structure must compile exactly once (whole-plan
+    build-once), counters must stay consistent, and every thread's
+    results must be bit-identical to a serial run."""
+    makers = [
+        lambda: fused(lambda X, w: ((X @ w) * 2.0).rowsums()),
+        lambda: fused(lambda X, w: (X * X).sum() + (w * w).sum()),
+        lambda: fused(lambda X, w: (X @ w).colsums()),
+    ]
+    X = arr(48, 12)
+    w = arr(12, 1)
+
+    def run_all():
+        outs = []
+        for make in makers:
+            region = make()               # fresh trace, fresh node ids
+            compiled = region.trace(X, w).plan(mode="gen").compile()
+            outs.append(np.asarray(compiled(X, w)))
+        return outs
+
+    PLAN_CACHE.clear()
+    WHOLE_PLAN_CACHE.clear()
+    serial = run_all()
+    serial_plan_misses = plan_cache_stats().misses
+    serial_whole_misses = whole_plan_cache_stats().misses
+
+    PLAN_CACHE.clear()
+    WHOLE_PLAN_CACHE.clear()
+    n_threads = 8
+    barrier = threading.Barrier(n_threads)
+    results = [None] * n_threads
+    errors = []
+
+    def worker(slot):
+        try:
+            barrier.wait()
+            results[slot] = run_all()
+        except Exception as e:            # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+
+    # no duplicate compiles: the hammered run built exactly what the
+    # serial run built, once per distinct structure, despite the race
+    wst = whole_plan_cache_stats()
+    assert wst.misses == serial_whole_misses == len(makers)
+    assert plan_cache_stats().misses == serial_plan_misses
+    assert wst.total == wst.hits + wst.misses
+    assert wst.hits >= (n_threads - 1) * len(makers)
+
+    # bit-identical results: same jitted fn, same inputs, same machine
+    for outs in results:
+        assert outs is not None
+        for got, ref in zip(outs, serial):
+            np.testing.assert_array_equal(got, ref)
 
 
 def test_plan_cache_stats_snapshot():

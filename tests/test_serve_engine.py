@@ -7,7 +7,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import LM
-from repro.serve import Engine, Request
+from repro.serve import AdmissionError, Engine, Request
 
 
 @pytest.fixture(scope="module")
@@ -56,6 +56,36 @@ def test_engine_many_requests_slot_reuse(setup):
         engine.submit(r)
     engine.run_until_done()
     assert all(r.done and len(r.out) == 4 for r in reqs)
+
+
+def test_admission_rejects_impossible_requests(setup):
+    """Regression: an over-long prompt used to be enqueued and prefill
+    past the KV cache; impossible requests must be rejected with a typed
+    error at submit() time, never enqueued."""
+    cfg, _, params = setup
+    rng = np.random.default_rng(2)
+    engine = Engine(cfg, params, batch_slots=2, max_len=16)
+
+    def prompt(p):
+        return rng.integers(0, cfg.vocab, size=p).astype(np.int32)
+
+    with pytest.raises(AdmissionError, match="max_new"):
+        engine.submit(Request(prompt=prompt(4), max_new=0))
+    with pytest.raises(AdmissionError, match="empty prompt"):
+        engine.submit(Request(prompt=prompt(0), max_new=4))
+    # max_len=16 leaves room for at most 15 prompt tokens + 1 decode step
+    with pytest.raises(AdmissionError, match="max_len"):
+        engine.submit(Request(prompt=prompt(16), max_new=4))
+    assert engine._queue.empty()          # nothing impossible enqueued
+
+    # the boundary case (P = max_len - 1) and a normal request still admit
+    ok = [Request(prompt=prompt(15), max_new=1),
+          Request(prompt=prompt(5), max_new=3)]
+    for r in ok:
+        engine.submit(r)
+    engine.run_until_done()
+    assert ok[0].done and len(ok[0].out) == 1
+    assert ok[1].done and len(ok[1].out) == 3
 
 
 @pytest.mark.parametrize("layout", ["fixed", "auto"])

@@ -1,0 +1,293 @@
+"""FusionServer: async continuous batching over compiled fused plans.
+
+Covers the serving request path (submit → Future → host-NumPy result
+parity with direct region calls), shape-bucketed batching with row
+padding, the pad-safety analysis (both as a unit and end-to-end via the
+exact-shape fallback), warming + the fusionlint hook, typed admission
+errors, and the metrics snapshot/report surface.
+
+Batched execution runs jit(vmap(plan_fn)) while the direct call runs
+jit(plan_fn): float32 reduction order may differ, so parity checks use
+rtol=1e-5 *and* atol=1e-5 (never pure atol).  Servers are always closed
+in ``finally`` — daemon workers executing XLA during interpreter
+shutdown can crash the process.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import fused, ir
+from repro.serve import (FusionServer, FusionServeError, PadReport,
+                         ServerClosedError, pad_safety)
+
+rng = np.random.default_rng(11)
+
+
+def _hinge():
+    return fused(lambda X, w, y: ir.relu(1.0 - y * (X @ w)))
+
+
+def _hinge_args(m, k=16):
+    X = rng.normal(size=(m, k)).astype(np.float32)
+    w = rng.normal(size=(k, 1)).astype(np.float32)
+    y = np.sign(rng.normal(size=(m, 1))).astype(np.float32)
+    return X, w, y
+
+
+def _probs():
+    def probs(X, W):
+        E = ir.exp(X @ W)
+        return E / E.rowsums()
+    return fused(probs)
+
+
+def _close(server):
+    server.close()
+
+
+def _parity(got, ref):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# request path: submit → Future → parity with direct execution
+# --------------------------------------------------------------------------
+
+def test_submit_matches_direct_call():
+    region = _hinge()
+    X, w, y = _hinge_args(50)
+    server = FusionServer(workers=1, max_batch=4, pad_to=32)
+    try:
+        got = server.submit(region, X, w, y).result(timeout=300)
+        ref = region(X, w, y)
+        assert isinstance(got, np.ndarray)      # host result, documented
+        assert got.shape == (50, 1)             # all-2-D call stays 2-D
+        _parity(got, ref)
+    finally:
+        _close(server)
+
+
+def test_vector_world_round_trip():
+    """1-D operands put the call in vector world: the served result must
+    round-trip (n, 1) → (n,) exactly like a direct region call."""
+    region = _hinge()
+    X, w, y = _hinge_args(40)
+    y1 = y.reshape(-1)
+    server = FusionServer(workers=1, max_batch=4, pad_to=32)
+    try:
+        got = server.submit(region, X, w, y1).result(timeout=300)
+        ref = region(X, w, y1)
+        assert got.shape == (40,) == ref.shape
+        _parity(got, ref)
+    finally:
+        _close(server)
+
+
+def test_batching_and_padding_mixed_sizes():
+    """Requests with different row counts inside one padded shape class
+    execute as ONE batched dispatch, each sliced back to its true rows.
+    Enqueue before starting the worker so the batch is deterministic."""
+    region = _hinge()
+    ms = (20, 25, 31, 32)               # all land in the 32-row class
+    cases = [(_hinge_args(m)) for m in ms]
+    server = FusionServer(workers=1, max_batch=8, pad_to=32,
+                          autostart=False)
+    server._started = True              # admit without draining
+    try:
+        futs = [server.submit(region, *args) for args in cases]
+        server._started = False
+        server.start()                  # drain: one bucket, one batch
+        results = [f.result(timeout=300) for f in futs]
+        for m, args, got in zip(ms, cases, results):
+            assert got.shape == (m, 1)
+            _parity(got, region(*args))
+        snap = server.metrics.snapshot()
+        assert snap["batches"]["count"] == 1
+        assert snap["batches"]["occupancy_max"] == 4
+        assert snap["batches"]["batched_requests"] == 4
+        assert snap["batches"]["padded_requests"] == 3   # 32 was exact
+        assert snap["requests"]["completed"] == 4
+        assert snap["compiles"]["count"] == 1            # one shared entry
+    finally:
+        _close(server)
+
+
+def test_three_buckets_interleaved():
+    """Two regions at mixed sizes → ≥3 distinct batch buckets served
+    concurrently, every result exact against direct execution."""
+    hinge, probs = _hinge(), _probs()
+    W = rng.normal(size=(16, 5)).astype(np.float32)
+    cases = []
+    for m in (20, 40, 20, 33, 40, 21):
+        cases.append((hinge, _hinge_args(m)))
+        Xp = rng.normal(size=(m, 16)).astype(np.float32)
+        cases.append((probs, (Xp, W)))
+    server = FusionServer(workers=2, max_batch=4, pad_to=32)
+    try:
+        futs = [server.submit(r, *args) for r, args in cases]
+        for (r, args), f in zip(cases, futs):
+            _parity(f.result(timeout=300), r(*args))
+        snap = server.metrics.snapshot()
+        assert len(snap["buckets"]) >= 3
+        assert snap["requests"]["completed"] == len(cases)
+        assert snap["requests"]["failed"] == 0
+    finally:
+        _close(server)
+
+
+# --------------------------------------------------------------------------
+# pad safety
+# --------------------------------------------------------------------------
+
+def _graph_of(region, *shaped):
+    import jax
+    import jax.numpy as jnp
+    return region.trace(*[jax.ShapeDtypeStruct(s, jnp.float32)
+                          for s in shaped]).graph
+
+
+def test_pad_safety_analysis_unit():
+    # hinge: padded rows are garbage but confined → safe, sliced on axis 0
+    g = _graph_of(_hinge(), (64, 16), (16, 1), (64, 1))
+    rep = pad_safety(g, frozenset({"X", "y"}))
+    assert rep.safe and rep.out_axes == (0,)
+
+    # sum of squares: padded rows stay exactly zero → the full reduction
+    # is exact, and the scalar output never sees the padded dim
+    g = _graph_of(fused(lambda X: (X * X).sum()), (64, 8))
+    rep = pad_safety(g, frozenset({"X"}))
+    assert rep.safe and rep.out_axes == (None,)
+
+    # +1 turns padded zeros into finite garbage; summing it is wrong
+    g = _graph_of(fused(lambda X: (X + 1.0).sum()), (64, 8))
+    rep = pad_safety(g, frozenset({"X"}))
+    assert not rep.safe and "sum" in rep.reason
+
+    # exp(0) = 1: same story through a unary
+    g = _graph_of(fused(lambda X: ir.exp(X).colsums()), (64, 8))
+    assert not pad_safety(g, frozenset({"X"})).safe
+
+    # mean over the padded dimension is never exact (divides by the
+    # padded count) even though the padded rows are zero
+    g = _graph_of(fused(lambda X: X.mean()), (64, 8))
+    assert not pad_safety(g, frozenset({"X"})).safe
+
+    # row-local aggregate: reduction is over the *un*padded axis → safe
+    g = _graph_of(fused(lambda X: ir.relu(X).rowsums()), (64, 8))
+    rep = pad_safety(g, frozenset({"X"}))
+    assert rep.safe and rep.out_axes == (0,)
+
+    assert isinstance(rep, PadReport)
+
+
+def test_pad_unsafe_region_falls_back_to_exact_buckets():
+    """A full reduction of non-zero-preserving data must NOT be padded;
+    the server degrades the class to exact-shape bucketing (identical
+    shapes still batch) and counts the fallback."""
+    region = fused(lambda X: (X + 1.0).sum())
+    X1 = rng.normal(size=(20, 8)).astype(np.float32)
+    X2 = rng.normal(size=(20, 8)).astype(np.float32)   # exact twin
+    X3 = rng.normal(size=(24, 8)).astype(np.float32)   # separate entry
+    server = FusionServer(workers=1, max_batch=4, pad_to=32,
+                          autostart=False)
+    server._started = True
+    try:
+        futs = [server.submit(region, X) for X in (X1, X2, X3)]
+        server._started = False
+        server.start()
+        for X, f in zip((X1, X2, X3), futs):
+            got = f.result(timeout=300)
+            assert got.shape == (1, 1)
+            _parity(got, (X.astype(np.float64) + 1.0).sum())
+        snap = server.metrics.snapshot()
+        assert snap["batches"]["pad_fallbacks"] == 2    # one per entry
+        assert snap["batches"]["padded_requests"] == 0
+        assert snap["batches"]["occupancy_max"] == 2    # the exact twins
+        assert snap["compiles"]["count"] == 2           # 20-row + 24-row
+    finally:
+        _close(server)
+
+
+# --------------------------------------------------------------------------
+# warming, lifecycle, admission errors
+# --------------------------------------------------------------------------
+
+def test_warm_and_warmed_plans():
+    """A warm-only server (workers=0) compiles entries ahead of traffic
+    and exposes their Planned stages for fusionlint --serving."""
+    region = _hinge()
+    server = FusionServer(workers=0, max_batch=4, pad_to=32,
+                          autostart=False)
+    X, w, y = _hinge_args(30)
+    report = server.warm([(region, {"X": X, "w": w, "y": y})],
+                         execute=True, batch_sizes=(1, 4))
+    assert len(report["entries"]) == 1
+    ent = report["entries"][0]
+    assert ent["batchable"] and ent["pad_safe"] and ent["digest"]
+    assert report["whole_plan_cache"]["capacity"] > 0
+    plans = server.warmed_plans()
+    assert len(plans) == 1
+    label, planned = plans[0]
+    assert "[" in label and "x" in label    # "<fn>[RxC/...]" shape label
+    assert planned.eplan is not None        # verifiable by fusionlint
+    # workers=0: admission is rejected with the typed closed error
+    with pytest.raises(ServerClosedError):
+        server.submit(region, X, w, y)
+
+
+def test_submit_typed_errors():
+    region = _hinge()
+    X, w, y = _hinge_args(20)
+    server = FusionServer(workers=1, max_batch=2, pad_to=32)
+    try:
+        with pytest.raises(FusionServeError):
+            server.submit(object(), X)             # not a fused region
+        with pytest.raises(FusionServeError) as ei:
+            server.submit(region, X, w)            # missing operand
+        assert "missing" in str(ei.value)
+        with pytest.raises(FusionServeError):
+            server.submit(region, X=X, w=w, z=y)   # unknown name
+        with pytest.raises(FusionServeError):
+            server.submit(region, X, w, "nope")    # not an array
+        with pytest.raises(FusionServeError):
+            server.submit(region, X[None], w, y)   # 3-D operand
+        assert server.metrics.snapshot()["requests"]["rejected"] == 5
+        assert server.metrics.snapshot()["requests"]["submitted"] == 0
+    finally:
+        _close(server)
+    with pytest.raises(ServerClosedError):
+        server.submit(region, X, w, y)             # closed server
+
+
+def test_metrics_snapshot_and_report_shape():
+    region = _hinge()
+    server = FusionServer(workers=1, max_batch=4, pad_to=32)
+    try:
+        args = _hinge_args(25)
+        server.submit(region, *args).result(timeout=300)
+        snap = server.metrics.snapshot()
+        for key in ("requests", "latency_us", "batches", "queue",
+                    "compiles", "buckets", "cache"):
+            assert key in snap, key
+        assert snap["latency_us"]["count"] == 1
+        assert snap["latency_us"]["p99"] >= snap["latency_us"]["p50"] > 0
+        for cache in ("plan", "whole_plan"):
+            st = snap["cache"][cache]
+            for field in ("hits", "misses", "evictions", "capacity"):
+                assert field in st, (cache, field)
+        doc = server.metrics.report(server)
+        assert doc["server"]["max_batch"] == 4
+        assert doc["server"]["entries"] == 1
+        assert isinstance(doc["serving"]["cache"]["whole_plan_keys"], list)
+    finally:
+        _close(server)
+
+
+def test_context_manager_closes():
+    region = _hinge()
+    args = _hinge_args(20)
+    with FusionServer(workers=1, max_batch=2, pad_to=32) as server:
+        _parity(server.submit(region, *args).result(timeout=300),
+                region(*args))
+    assert server._closed and not server._threads

@@ -6,10 +6,11 @@ Two checks over ``README.md`` and ``docs/*.md``:
 1. **Link check** — every relative markdown link target must exist on
    disk (external http(s)/mailto links are skipped to keep the job
    hermetic; pure #anchors are skipped).
-2. **Quickstart drift** — the README code block between
-   ``<!-- ci:quickstart:start -->`` and ``<!-- ci:quickstart:end -->``
-   is extracted verbatim and executed with ``PYTHONPATH=src``; any API
-   drift that breaks the documented snippet fails here.
+2. **Snippet drift** — every README code block between
+   ``<!-- ci:NAME:start -->`` and ``<!-- ci:NAME:end -->`` markers
+   (``quickstart``, ``serving``, ...) is extracted verbatim and
+   executed with ``PYTHONPATH=src``; any API drift that breaks a
+   documented snippet fails here.
 
 Usage: ``python tools/check_docs.py`` (from the repo root; exits
 nonzero on failure).
@@ -54,23 +55,30 @@ def check_links() -> list[str]:
     return errors
 
 
-def quickstart_snippet() -> str:
-    """The verbatim quickstart code block from README.md."""
+def snippet_names() -> list[str]:
+    """Every ``ci:NAME`` snippet marker present in README.md."""
     text = (REPO / "README.md").read_text()
-    m = re.search(r"<!-- ci:quickstart:start -->\s*```python\n(.*?)```\s*"
-                  r"<!-- ci:quickstart:end -->", text, re.DOTALL)
+    return list(dict.fromkeys(re.findall(r"<!-- ci:(\w+):start -->",
+                                         text)))
+
+
+def ci_snippet(name: str) -> str:
+    """The verbatim ``ci:name`` code block from README.md."""
+    text = (REPO / "README.md").read_text()
+    m = re.search(rf"<!-- ci:{name}:start -->\s*```python\n(.*?)```\s*"
+                  rf"<!-- ci:{name}:end -->", text, re.DOTALL)
     if m is None:
         raise AssertionError(
-            "README.md: ci:quickstart markers (or the ```python block "
+            f"README.md: ci:{name} markers (or the ```python block "
             "between them) not found")
     return m.group(1)
 
 
-def run_quickstart() -> subprocess.CompletedProcess:
-    """Execute the README quickstart snippet in a fresh interpreter."""
+def run_snippet(name: str) -> subprocess.CompletedProcess:
+    """Execute one README ci-snippet in a fresh interpreter."""
     import os
-    snippet = quickstart_snippet()
-    with tempfile.NamedTemporaryFile("w", suffix="_readme_quickstart.py",
+    snippet = ci_snippet(name)
+    with tempfile.NamedTemporaryFile("w", suffix=f"_readme_{name}.py",
                                      delete=False) as f:
         f.write(snippet)
         path = f.name
@@ -79,6 +87,16 @@ def run_quickstart() -> subprocess.CompletedProcess:
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
     return subprocess.run([sys.executable, path], capture_output=True,
                           text=True, timeout=600, env=env, cwd=str(REPO))
+
+
+def quickstart_snippet() -> str:
+    """The verbatim quickstart code block from README.md."""
+    return ci_snippet("quickstart")
+
+
+def run_quickstart() -> subprocess.CompletedProcess:
+    """Execute the README quickstart snippet in a fresh interpreter."""
+    return run_snippet("quickstart")
 
 
 def main() -> int:
@@ -91,16 +109,22 @@ def main() -> int:
     print(f"link check: {len(doc_files())} files, "
           f"{'FAIL' if errors else 'ok'}")
 
-    res = run_quickstart()
-    if res.returncode != 0:
-        print("QUICKSTART FAIL (README drifted from the code):")
-        print(res.stdout)
-        print(res.stderr)
+    names = snippet_names()
+    if "quickstart" not in names:
+        print("SNIPPET FAIL: README.md has no ci:quickstart block")
         failures += 1
-    else:
-        print("quickstart: ok")
-        if res.stdout.strip():
+    for name in names:
+        res = run_snippet(name)
+        if res.returncode != 0:
+            print(f"SNIPPET FAIL ci:{name} (README drifted from the "
+                  "code):")
             print(res.stdout)
+            print(res.stderr)
+            failures += 1
+        else:
+            print(f"snippet ci:{name}: ok")
+            if res.stdout.strip():
+                print(res.stdout)
     return 1 if failures else 0
 
 

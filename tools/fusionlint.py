@@ -23,6 +23,13 @@ segment running locally, sparse operand refusing to shard, per-operator
 debug dispatch) must carry a nonempty recorded reason — a fallback
 entry without one is an error.  ``--verbose`` prints every clean plan
 and every explained fallback, not just a summary.
+
+``--serving`` additionally warms a :class:`repro.serve.FusionServer`
+with the load harness's cases (``benchmarks.serving.harness_regions``)
+and verifies every plan the warmed cache holds — the serving path
+compiles plans at *padded shape classes*, so EXE005/no-silent-fallback
+run over exactly the ExecPlans concurrent traffic executes, not just
+the paper-shape ones.
 """
 
 from __future__ import annotations
@@ -141,8 +148,39 @@ def _check_fallbacks(eplan, layout, label: str,
     return len(entries), silent
 
 
+def lint_serving(level: str, verbose: bool) -> tuple[int, list[str]]:
+    """Verify the plans the serving harness compiles, reusing the warmed
+    entry cache (``workers=0`` server: warm() plans and compiles without
+    executing anything).  Returns (plans verified, failing labels)."""
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from benchmarks.serving import MAX_BATCH, PAD_TO, harness_regions
+    from repro.serve import FusionServer
+
+    server = FusionServer(workers=0, max_batch=MAX_BATCH, pad_to=PAD_TO,
+                          autostart=False)
+    cases = harness_regions()
+    server.warm([(region, ops) for _l, region, ops in cases],
+                execute=False)
+    failed: list[str] = []
+    n = 0
+    for label, planned in server.warmed_plans():
+        full = f"serving/{label}"
+        report = verify_plan(planned.eplan, level=level, layout=None)
+        n += 1
+        if report.errors:
+            failed.append(full)
+        if report.diagnostics or verbose:
+            print(f"{full}: {report.pretty()}")
+        if level == "strict":
+            total, silent = _check_fallbacks(planned.eplan, None, full,
+                                             verbose)
+            if silent:
+                failed.append(f"{full} [no-silent-fallback]")
+    return n, failed
+
+
 def lint(algos: list[str], modes: list[str], level: str,
-         verbose: bool) -> int:
+         verbose: bool, serving: bool = False) -> int:
     n_plans = n_errors = n_warnings = n_fallbacks = n_silent = 0
     failed: list[str] = []
     layouts = [("local", None), ("mesh[data=4]", _mesh())]
@@ -169,6 +207,11 @@ def lint(algos: list[str], modes: list[str], level: str,
                         if silent:
                             n_errors += silent
                             failed.append(f"{label} [no-silent-fallback]")
+    if serving:
+        n, sfailed = lint_serving(level, verbose)
+        n_plans += n
+        n_errors += len(sfailed)
+        failed.extend(sfailed)
     print(f"fusionlint: {n_plans} plans verified [{level}] — "
           f"{n_errors} error(s), {n_warnings} warning(s)"
           + (f", {n_fallbacks} fallback(s) ({n_silent} silent)"
@@ -195,6 +238,9 @@ def main(argv=None) -> int:
     ap.add_argument("--strict", action="store_true",
                     help="full pass: build CPlans, replay placements/"
                          "segments, check the whole-plan key")
+    ap.add_argument("--serving", action="store_true",
+                    help="also verify the plans the serving harness "
+                         "compiles (warmed FusionServer cache)")
     ap.add_argument("--verbose", action="store_true",
                     help="print every verified plan, including clean "
                          "ones")
@@ -207,7 +253,7 @@ def main(argv=None) -> int:
         if m not in MODES:
             ap.error(f"unknown mode '{m}' (choices: {', '.join(MODES)})")
     return lint(algos, modes, "strict" if args.strict else "cheap",
-                args.verbose)
+                args.verbose, serving=args.serving)
 
 
 if __name__ == "__main__":
