@@ -75,6 +75,17 @@ def _nll_terms(P, Y):
     return (Y * ir.log(P + 1e-30)).sum()
 
 
+# the fit sufficient statistic ⟨XᵀY, B⟩ = Σ B⊙(XᵀY), written in its
+# textbook form.  As written the planner needs two operators (the (n,k)
+# XᵀY product, then the weighted aggregate); the SPORES rotation
+# sum(B⊙(XᵀY)) = sum((X@B)⊙Y) is a single Row-template pass over X with
+# no (n,k) intermediate — the rewrite sweep's demonstrable win, pinned by
+# tests/golden/explain_rewrite_mlogreg.json.
+@fused
+def _fit_terms(X, B, Y):
+    return (B * (X.T @ Y)).sum()
+
+
 def run(X, Y, lam: float = 1e-3, max_outer: int = 10, max_inner: int = 20,
         eps: float = 1e-12, mode: str = "gen", pallas: str = "never",
         layout=None, staged: bool = True):

@@ -204,12 +204,71 @@ class Traced:
                                                  extra_shapes=shapes))
         eff = layout_cost_params(ctx.layout, self.graph, ctx.params)
         eplan = plan_graph(self.graph, ctx.mode, eff)
-        return _verified_planned(self, ctx, eplan)
+        rw_report = None
+        if ctx.rewrite:
+            eplan, rw_report = _rewrite_sweep(self.graph, ctx, eplan)
+        planned = _verified_planned(self, ctx, eplan)
+        planned._rewrite = rw_report
+        return planned
 
 
 # --------------------------------------------------------------------------
 # stage 2: Planned — a selected ExecPlan with costs and an explain() report
 # --------------------------------------------------------------------------
+
+def _rewrite_sweep(graph: ir.Graph, ctx: FusionContext,
+                   base: ExecPlan) -> tuple[ExecPlan, dict]:
+    """The SPORES-style variant sweep between trace and plan: generate
+    algebraically-equal DAG variants (:mod:`repro.core.rewrite`), gate
+    each through the rewrite verifier (RW001–RW004 — always at least
+    ``"cheap"``, even under ``verify="off"``: rejecting an illegal
+    variant is a correctness property, not a diagnostic), plan the clean
+    ones through the same explore → select pipeline, and return the
+    global cost argmin plus the ``explain()["rewrite"]`` report.
+
+    Deterministic: variants come out of the bounded BFS in a fixed
+    order, plans tie-break toward the earlier variant (and the original
+    DAG before any variant), and rule labels use topological indices —
+    so re-tracing the same expression reproduces the report verbatim."""
+    from .rewrite import rewrite_variants
+    from .verify import verify_variant
+
+    level = "strict" if ctx.verify == "strict" else "cheap"
+    variants = rewrite_variants(graph)
+    entries = [{"rules": [], "cost": base.cost, "selected": False}]
+    rejected: list[dict] = []
+    best, best_idx, best_rules = base, 0, ()
+    for v in variants:
+        vrep = verify_variant(graph, v.graph, level=level)
+        if not vrep.ok:
+            rejected.append({"rules": list(v.rules),
+                             "errors": sorted({d.code
+                                               for d in vrep.errors})})
+            continue
+        eff_v = layout_cost_params(ctx.layout, v.graph, ctx.params)
+        ep = plan_graph(v.graph, ctx.mode, eff_v)
+        entries.append({"rules": list(v.rules), "cost": ep.cost,
+                        "selected": False})
+        if ep.cost < best.cost:
+            best, best_idx, best_rules = ep, len(entries) - 1, v.rules
+    entries[best_idx]["selected"] = True
+    best.rewrite = tuple(best_rules)
+    report = {
+        "enabled": True,
+        "n_variants": len(variants),
+        "n_planned": len(entries) - 1,
+        "n_rejected": len(rejected),
+        "rejected": rejected,
+        "variants": entries,
+        "winner": {
+            "rules": list(best_rules),
+            "cost": best.cost,
+            "baseline_cost": base.cost,
+            "improvement": base.cost - best.cost,
+        },
+    }
+    return best, report
+
 
 def _verified_planned(traced: Traced, ctx: FusionContext,
                       eplan: ExecPlan) -> "Planned":
@@ -255,6 +314,9 @@ class Planned:
     _bwd: Optional["Planned"] = field(default=None, repr=False)
     #: VerifyReport from the plan() stage boundary (None: verify="off")
     _verify: Optional[VerifyReport] = field(default=None, repr=False)
+    #: rewrite-sweep report from Traced.plan() (None: ctx.rewrite=False or
+    #: a path that never swept, e.g. the planned backward)
+    _rewrite: Optional[dict] = field(default=None, repr=False)
 
     @property
     def cost(self) -> float:
@@ -278,14 +340,17 @@ class Planned:
         return out
 
     def candidates(self) -> list[dict]:
-        """Cost every selection arm for this trace (the per-candidate
-        report, analogous to the layout planner's candidate sweep)."""
-        eff = layout_cost_params(self.context.layout, self.traced.graph,
+        """Cost every selection arm for this plan's graph (the
+        per-candidate report, analogous to the layout planner's candidate
+        sweep).  Uses ``eplan.graph`` — when the rewrite sweep won, the
+        arms are costed on the *winning variant*, so the table compares
+        like with like."""
+        eff = layout_cost_params(self.context.layout, self.eplan.graph,
                                  self.context.params)
         out = []
         for m in MODES:
             p = self.eplan if m == self.context.mode \
-                else plan_graph(self.traced.graph, m, eff)
+                else plan_graph(self.eplan.graph, m, eff)
             out.append({"mode": m, "cost": p.cost,
                         "n_fused": len(p.fused_specs()),
                         "n_operators": len(p.specs),
@@ -322,7 +387,11 @@ class Planned:
         sparsity per operand), ``winner`` (cost, operator count, and one
         signature per fused operator — see :meth:`fused_signatures`),
         ``candidates`` (every selection arm costed on this trace),
-        ``stats`` (exploration/enumeration counters), ``execution``
+        ``rewrite`` (the trace→plan algebraic-variant sweep: rules
+        applied, per-variant cost, rejected variants with their RW
+        codes, and the winning rule chain — ``{"enabled": False}`` when
+        the context disabled it), ``stats`` (exploration/enumeration
+        counters), ``execution``
         (staged whole-plan compilation: the per-call dispatch count, the
         dead intermediates the staged trace frees for buffer reuse, and
         the guarantee that inputs are never donated), and ``layout``
@@ -351,6 +420,11 @@ class Planned:
                 "operators": self.fused_signatures(),
             },
             "candidates": self.candidates(),
+            # the trace→plan rewrite sweep (rules applied, per-variant
+            # cost, winner); {"enabled": False} when the context disabled
+            # it or this Planned came from a path that never sweeps
+            "rewrite": (self._rewrite if self._rewrite is not None
+                        else {"enabled": False}),
             "stats": {
                 "explored_operators": ex.operators if ex else 0,
                 "memo_entries": ex.entries_kept if ex else 0,

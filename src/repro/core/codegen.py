@@ -714,7 +714,7 @@ class CompiledPlan:
             return tuple(_mat(env[o]) for o in output_ids)
 
         key = (tuple(key_parts), tuple(canon[o] for o in output_ids),
-               self.pallas)
+               self.pallas, tuple(getattr(self.plan, "rewrite", ()) or ()))
         self._staged_key = key
         # build-once under concurrency: racing threads compiling
         # structurally-equal plans share one jitted function (and with
@@ -929,7 +929,8 @@ def staged_plan_key(plan: ExecPlan, pallas: str = "never",
                       else ("lit", float(i.attrs["value"]))
                       for i in node.inputs)))
             canon[spec.root] = ("s", step_idx, 0, 0)
-    return (tuple(key_parts), tuple(canon[o] for o in output_ids), pallas)
+    return (tuple(key_parts), tuple(canon[o] for o in output_ids), pallas,
+            tuple(getattr(plan, "rewrite", ()) or ()))
 
 
 def plan_fallbacks(plan: ExecPlan, layout=None, pallas: str = "never",

@@ -68,6 +68,13 @@ class FusionContext:
         whole-plan cache key — the ``fusionlint`` mode), or ``"off"``.
         Error-severity diagnostics raise
         :class:`~repro.core.verify.VerificationError`.
+    rewrite : bool
+        Algebraic rewrite pass between trace and plan (default True):
+        ``Traced.plan()`` generates semantically-equal DAG variants
+        (:mod:`repro.core.rewrite`), verifies each (RW001–RW004), plans
+        the clean ones, and selects the global cost argmin;
+        ``explain()["rewrite"]`` reports the sweep.  False plans the DAG
+        exactly as written.
 
     A context is itself a context manager: ``with FusionContext(...):``
     scopes it onto a thread-local stack that :func:`current_context`
@@ -80,6 +87,7 @@ class FusionContext:
     params: CostParams = field(default_factory=lambda: TPU_V5E)
     layout: Optional[Any] = None        # FusionLayout (kept Any: no jax dep)
     verify: str = "cheap"               # "off" | "cheap" | "strict"
+    rewrite: bool = True                # SPORES-style variant sweep in plan()
 
     def with_(self, **kw) -> "FusionContext":
         """Derived context with the given fields replaced."""
@@ -97,7 +105,7 @@ class FusionContext:
                 tuple(sorted(p.input_read_bw.items())),
                 p.dist.signature() if p.dist is not None else None)
         return (self.mode, self.pallas, self.staged, pkey,
-                layout_signature(self.layout), self.verify)
+                layout_signature(self.layout), self.verify, self.rewrite)
 
     # -- scoping ------------------------------------------------------------
     def __enter__(self) -> "FusionContext":
@@ -134,7 +142,8 @@ current_config = current_context
 def fusion_mode(mode: Optional[str] = None, pallas: Optional[str] = None,
                 params: Optional[CostParams] = None, layout: Any = None,
                 staged: Optional[bool] = None,
-                verify: Optional[str] = None):
+                verify: Optional[str] = None,
+                rewrite: Optional[bool] = None):
     """Sugar: scope a context derived from the current one."""
     kw = {}
     if mode is not None:
@@ -149,6 +158,8 @@ def fusion_mode(mode: Optional[str] = None, pallas: Optional[str] = None,
         kw["staged"] = staged
     if verify is not None:
         kw["verify"] = verify
+    if rewrite is not None:
+        kw["rewrite"] = rewrite
     ctx = current_context().with_(**kw)
     with ctx:
         yield ctx

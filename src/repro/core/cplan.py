@@ -159,10 +159,13 @@ def _variant_of(graph: Graph, ttype: TType, root: Node, cover: set[int]):
         variant = {"full": FULL_AGG, "row": ROW_AGG, "col": COL_AGG}[ax]
         return variant, root.op, root.inputs[0].nid, None
     if root.is_matmul and ttype == TType.ROW:
-        if root.ta:
+        if root.ta and not root.tb:
             # t(X) @ chain — column-transposed aggregation
             return COL_T_AGG, "sum", root.inputs[1].nid, root.inputs[0].nid
-        # (chain) @ B — stays row-wise; the matmul runs inside the program
+        # (chain) @ B — stays row-wise; the matmul runs inside the program.
+        # (t(A) @ t(B) also lands here defensively: the program evaluates
+        # the matmul with both transpose flags — templates refuse to open
+        # such roots, see templates._narrow_mm.)
         return NO_AGG, "", root.nid, None
     if root.is_matmul and ttype == TType.OUTER:
         a, b = root.inputs

@@ -83,6 +83,11 @@ class ExecPlan:
     #: cost parameters the plan was selected under — the verifier replays
     #: placement/segment derivations and constraint checks against these
     params: Optional[CostParams] = None
+    #: winning rewrite-rule chain (:mod:`repro.core.rewrite` labels, e.g.
+    #: ``("spores_rotate@7",)``) when this plan was selected for a rewritten
+    #: variant of the traced DAG; () for the DAG as written.  Part of the
+    #: whole-plan cache key (:func:`repro.core.codegen.staged_plan_key`).
+    rewrite: tuple = ()
 
     def fused_specs(self) -> list:
         return [s for s in self.specs if getattr(s, "fused", False)]

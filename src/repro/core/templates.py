@@ -74,8 +74,15 @@ def _row_compatible_shapes(h: Node) -> bool:
 
 def _narrow_mm(h: Node) -> bool:
     """Matrix multiplication with a narrow output (matrix-vector or
-    matrix–narrow-matrix chain — the Row template's bread and butter)."""
+    matrix–narrow-matrix chain — the Row template's bread and butter).
+
+    A double-transposed product t(A) @ t(B) is excluded: neither Row
+    skeleton closes it (col_t_agg contracts t(X) @ chain, no_agg runs the
+    chain's rows through (chain) @ B), so it executes as a basic operator
+    instead of silently dropping one transpose inside a fused cover."""
     if not h.is_matmul:
+        return False
+    if h.ta and h.tb:
         return False
     m, k, n = h.mm_dims()
     return n <= NARROW_MAX and k > 1 and m > 1

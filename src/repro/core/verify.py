@@ -25,6 +25,15 @@ framework:
   intermediate), donation-aliasing safety, and — in strict mode —
   whole-plan-cache key completeness (every consumed value resolves to a
   structural token of the staged lowering).
+* :func:`verify_rewrite` — the **rewrite-variant verifier** (RW001–RW004)
+  over pairs of graphs produced by :mod:`repro.core.rewrite`: output
+  arity, output shape/dtype re-derived bottom-up via
+  :func:`repro.core.ir.infer_shape`, named-input set preservation, and
+  sparse-zero-preservation (static zero-propagation: any output the
+  original forces to zero when an input is all-zeros, the variant must
+  force too).  :func:`verify_variant` bundles it with
+  :func:`verify_graph` — the gate every rewrite variant passes before
+  ``Traced.plan()`` will price it.
 
 Two effort levels: ``"cheap"`` (O(plan) structural checks; the default at
 the ``Traced.plan()`` / ``Planned.compile()`` stage boundaries) and
@@ -777,6 +786,133 @@ def _verify_exec_strict(eplan, pallas: str) -> list[Diagnostic]:
         _diag(out, "EXE004", "error", None,
               f"whole-plan key computation failed: {e}")
     return out
+
+
+# --------------------------------------------------------------------------
+# checker 4: the rewrite-variant verifier (RW001–RW004)
+# --------------------------------------------------------------------------
+
+def _derived_shapes(graph: Graph) -> dict[int, tuple[int, int]]:
+    """Output shapes re-derived bottom-up via :func:`ir.infer_shape`
+    (stored metadata only where the op carries no derivable shape)."""
+    d: dict[int, tuple[int, int]] = {}
+    for n in graph.nodes:
+        got = ir.infer_shape(n.op, [d[i.nid] for i in n.inputs], n.attrs)
+        d[n.nid] = got if got is not None else n.shape
+    return d
+
+
+def _zero_forced(graph: Graph, input_name: str) -> tuple[bool, ...]:
+    """Static zero-propagation: for each graph output, is it *forced* to
+    all-zeros when the input named ``input_name`` is all-zeros?  The
+    conservative lattice behind RW004: mul/matmul are zero if either
+    operand is, div if the numerator is, add/sub if both are, full/row/col
+    aggregates and zero-preserving unaries pass zero through, literals are
+    zero iff their value is; everything else is assumed non-zero."""
+    z: dict[int, bool] = {}
+    for n in graph.nodes:
+        if n.op == "input":
+            r = n.name == input_name
+        elif n.op == "lit":
+            r = float(n.sparsity) == 0.0
+        elif n.op in ("t", "idx", "diagv"):
+            r = z[n.inputs[0].nid]
+        elif n.op in ("matmul", "mul") and len(n.inputs) == 2:
+            r = z[n.inputs[0].nid] or z[n.inputs[1].nid]
+        elif n.op == "div":
+            r = z[n.inputs[0].nid]
+        elif n.op in ("add", "sub") and len(n.inputs) == 2:
+            r = all(z[i.nid] for i in n.inputs)
+        elif n.is_agg:
+            r = z[n.inputs[0].nid]       # agg of all-zeros is zero (min/max incl.)
+        elif n.op in ir.SPARSE_SAFE_UNARY:
+            r = z[n.inputs[0].nid]
+        else:
+            r = False
+        z[n.nid] = r
+    return tuple(z[o.nid] for o in graph.outputs)
+
+
+def verify_rewrite(original: Graph, variant: Graph) -> list[Diagnostic]:
+    """RW001–RW004: is ``variant`` a legal rewrite of ``original``?
+
+    * **RW001** — output arity preserved.
+    * **RW002** — per-output shape and dtype preserved, shapes re-derived
+      bottom-up via :func:`ir.infer_shape` (a rule that miscomputes a
+      replacement shape is caught here even if its stored metadata
+      self-consistently lies).
+    * **RW003** — named-input set preserved, with per-name shape/dtype
+      agreement (the planned backward keys gradients by input name; a
+      variant that drops or retypes an input breaks it).
+    * **RW004** — sparse-zero-preservation: every output the original
+      statically forces to zero when some input is all-zeros, the variant
+      must force to zero too — otherwise sparsity exploitation over the
+      rewritten form could read cells the original never produced.
+    """
+    out: list[Diagnostic] = []
+    if len(variant.outputs) != len(original.outputs):
+        _diag(out, "RW001", "error", None,
+              f"rewrite changed output arity: "
+              f"{len(original.outputs)} -> {len(variant.outputs)}",
+              "a rule must replace a node with exactly one root")
+        return out                       # positional checks are meaningless
+
+    do = _derived_shapes(original)
+    dv = _derived_shapes(variant)
+    for i, (a, b) in enumerate(zip(original.outputs, variant.outputs)):
+        if do[a.nid] != dv[b.nid]:
+            _diag(out, "RW002", "error", b.nid,
+                  f"rewrite changed output[{i}] shape: "
+                  f"{do[a.nid]} -> {dv[b.nid]} (re-derived)",
+                  "every rule must be shape-preserving on its match")
+        if a.dtype != b.dtype:
+            _diag(out, "RW002", "error", b.nid,
+                  f"rewrite changed output[{i}] dtype: "
+                  f"{a.dtype} -> {b.dtype}")
+
+    ins_o = {n.name: n for n in original.inputs()}
+    ins_v = {n.name: n for n in variant.inputs()}
+    if set(ins_o) != set(ins_v):
+        _diag(out, "RW003", "error", None,
+              f"rewrite changed the named-input set: "
+              f"{sorted(ins_o)} -> {sorted(ins_v)}",
+              "planned backward keys gradients by input name")
+    else:
+        for name in sorted(ins_o):
+            a, b = ins_o[name], ins_v[name]
+            if a.shape != b.shape or a.dtype != b.dtype:
+                _diag(out, "RW003", "error", b.nid,
+                      f"rewrite retyped input '{name}': "
+                      f"{a.shape}/{a.dtype} -> {b.shape}/{b.dtype}")
+        for name in sorted(ins_o):
+            zo = _zero_forced(original, name)
+            zv = _zero_forced(variant, name)
+            for i, (fo, fv) in enumerate(zip(zo, zv)):
+                if fo and not fv:
+                    _diag(out, "RW004", "error", None,
+                          f"rewrite loses sparse-zero-preservation: "
+                          f"output[{i}] is zero-forced by input "
+                          f"'{name}' in the original but not in the "
+                          f"variant",
+                          "the rewritten expression must stay "
+                          "zero-preserving over every input the "
+                          "original is")
+    return out
+
+
+def verify_variant(original: Graph, variant: Graph,
+                   level: str = "cheap") -> VerifyReport:
+    """The rewrite-variant gate: IR-verify the variant graph, then check
+    the RW001–RW004 pair invariants against the original.  Variants with
+    a non-``ok`` report are rejected before planning (and recorded in
+    ``explain()["rewrite"]["rejected"]``)."""
+    assert level in ("off", "cheap", "strict"), level
+    report = VerifyReport(level=level)
+    if level == "off":
+        return report
+    report.diagnostics.extend(verify_graph(variant))
+    report.diagnostics.extend(verify_rewrite(original, variant))
+    return report
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,269 @@
+"""Differential equivalence harness: plan-and-execute two HOP DAGs and
+assert numerical parity, forward and grad.
+
+The harness is the trust anchor of the rewrite pass (ISSUE 9 / SPORES):
+an algebraic rule is only as good as the evidence that every variant it
+produces computes the same function, so equivalence is checked by
+*execution* — both DAGs go through the full staged pipeline
+(trace-equivalent ``Traced`` → ``plan()`` → ``compile()`` → run) and
+must agree to ``DEFAULT_TOL`` on forward outputs and on ``jax.grad``
+w.r.t. any requested inputs (the grad path exercises planned-backward
+over each DAG).  The same helpers also express the older
+staged-vs-per-operator parity checks (``assert_staged_parity``), so
+``test_whole_plan.py`` and ``test_rewrite.py`` share one oracle.
+
+``random_case`` is the seeded random-DAG generator behind the
+differential fuzzer: scalar-valued expressions composed from the
+sub-patterns the rewrite rules target (sum-of-matmul-product, dead
+transposes under aggregates, sums of sums, scalar-scaled aggregates)
+plus generic element-wise chains, over dense or BCSR operands.  Purely
+``np.random.default_rng(seed)``-driven — no hypothesis dependency, every
+case reproducible from its seed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ir
+from repro.core.api import Traced
+from repro.core.context import current_context
+from repro.kernels.blocksparse import BCSR
+
+DEFAULT_TOL = 1e-5
+
+
+def allclose(a, b, tol: float = DEFAULT_TOL, label: str = ""):
+    """Tuple-normalizing allclose with rtol=atol=tol."""
+    a = a if isinstance(a, tuple) else (a,)
+    b = b if isinstance(b, tuple) else (b,)
+    assert len(a) == len(b), f"{label}: arity {len(a)} != {len(b)}"
+    for i, (x, y) in enumerate(zip(a, b)):
+        np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=tol, atol=tol,
+            err_msg=f"{label}[out {i}]")
+
+
+def traced_from_graph(graph: ir.Graph, bindings: dict,
+                      name: str = "diff") -> Traced:
+    """Wrap a hand-built HOP DAG as a Traced, deriving operand metadata
+    from the graph's input nodes and the concrete bindings' formats."""
+    meta = {}
+    for n in graph.inputs():
+        v = bindings[n.name]
+        meta[n.name] = {"shape": n.shape,
+                        "format": "bcsr" if isinstance(v, BCSR)
+                        else "dense",
+                        "sparsity": n.sparsity}
+    return Traced(name, graph, [n.name for n in graph.inputs()], meta)
+
+
+def plan_and_execute(graph: ir.Graph, bindings: dict, *, grad_wrt=(),
+                     mode: str = "gen", staged: bool = True,
+                     pallas: str = "never", layout=None,
+                     rewrite: bool = False):
+    """Plan a DAG through the staged pipeline and execute it on
+    ``bindings``; returns ``(outputs tuple, {name: grad})``.
+
+    ``rewrite=False`` by default: the harness executes the DAG *as
+    written* — when comparing a rewrite variant against its original,
+    neither side may be silently re-rewritten by the sweep."""
+    ctx = current_context().with_(mode=mode, staged=staged, pallas=pallas,
+                                  rewrite=rewrite)
+    if layout is not None:
+        ctx = ctx.with_(layout=layout)
+    compiled = traced_from_graph(graph, bindings).plan(context=ctx).compile()
+    names = [n.name for n in graph.inputs()]
+    outs = compiled(**{n: bindings[n] for n in names})
+    outs = outs if isinstance(outs, tuple) else (outs,)
+    grads = {}
+    for gname in grad_wrt:
+        def scalar(v, gname=gname):
+            b = {n: bindings[n] for n in names}
+            b[gname] = v
+            o = compiled(**b)
+            o = o if isinstance(o, tuple) else (o,)
+            return sum(jnp.sum(x) for x in o)
+        grads[gname] = jax.grad(scalar)(bindings[gname])
+    return outs, grads
+
+
+def assert_equivalent(ref_graph: ir.Graph, got_graph: ir.Graph,
+                      bindings: dict, *, grad_wrt=(),
+                      tol: float = DEFAULT_TOL, label: str = "",
+                      **ctx_kw):
+    """Plan-and-execute both DAGs on the same bindings and assert parity
+    of every forward output and every requested gradient."""
+    ref_o, ref_g = plan_and_execute(ref_graph, bindings,
+                                    grad_wrt=grad_wrt, **ctx_kw)
+    got_o, got_g = plan_and_execute(got_graph, bindings,
+                                    grad_wrt=grad_wrt, **ctx_kw)
+    allclose(got_o, ref_o, tol=tol, label=f"{label} fwd")
+    for n in grad_wrt:
+        allclose(got_g[n], ref_g[n], tol=tol, label=f"{label} grad[{n}]")
+
+
+def assert_staged_parity(f, args, *, grad_index=None, mode: str = "gen",
+                         layout=None, tol: float = DEFAULT_TOL):
+    """Staged whole-plan execution vs the per-operator debug path must
+    agree on one Planned — forward, and (``grad_index``) ``jax.grad``
+    w.r.t. that positional operand of the scalar output.  Returns the
+    Planned for further assertions."""
+    planned = f.trace(*args).plan(mode=mode, layout=layout)
+    s = planned.compile(staged=True)
+    p = planned.compile(staged=False)
+    allclose(p(*args), s(*args), tol=tol, label="staged-vs-per-op fwd")
+    if grad_index is not None:
+        def obj(op, v):
+            a = list(args)
+            a[grad_index] = v
+            return op(*a)[0, 0]
+        gs = jax.grad(lambda v: obj(s, v))(args[grad_index])
+        gp = jax.grad(lambda v: obj(p, v))(args[grad_index])
+        allclose(gp, gs, tol=tol, label="staged-vs-per-op grad")
+    return planned
+
+
+# --------------------------------------------------------------------------
+# seeded random-DAG generation (the fuzzer's case source)
+# --------------------------------------------------------------------------
+
+#: dims are multiples of 16 so any operand can be handed to BCSR(bs=16)
+_DIMS = (16, 32, 48)
+
+
+class _CaseBuilder:
+    """Accumulates fresh named inputs + their concrete values while the
+    term builders below compose a random scalar expression."""
+
+    def __init__(self, rng: np.random.Generator):
+        self.rng = rng
+        self.bindings: dict = {}
+        self.exprs: dict = {}
+        self._i = 0
+
+    def new(self, m: int, n: int):
+        name = f"X{self._i}"
+        self._i += 1
+        self.bindings[name] = jnp.asarray(
+            self.rng.normal(size=(m, n)).astype(np.float32) * 0.3)
+        e = ir.matrix(name, (m, n))
+        self.exprs[name] = e
+        return e
+
+    def new_bcsr(self, m: int, n: int, density: float = 0.4):
+        """A block-sparse input: block mask over 16×16 tiles, value bound
+        as a real BCSR, planning-time sparsity hint on the IR matrix."""
+        name = f"X{self._i}"
+        self._i += 1
+        mask = np.kron(self.rng.random((m // 16, n // 16)) < density,
+                       np.ones((16, 16)))
+        mask[:16, :16] = 1.0                     # never fully empty
+        dense = (self.rng.normal(size=(m, n)) * mask * 0.3).astype(
+            np.float32)
+        self.bindings[name] = BCSR.from_dense(dense, bs=16)
+        e = ir.matrix(name, (m, n), sparsity=float(mask.mean()))
+        self.exprs[name] = e
+        return e
+
+    def scalar(self) -> float:
+        return float(np.round(self.rng.uniform(0.5, 2.5), 3))
+
+    def dims(self, k: int = 1):
+        vals = self.rng.choice(len(_DIMS), size=k)
+        got = tuple(_DIMS[int(v)] for v in vals)
+        return got[0] if k == 1 else got
+
+
+def _term_rotate(b: _CaseBuilder):
+    """sum((A@B) ⊙ C) — the SPORES rotation target, random transposes."""
+    m, k, n = b.dims(3)
+    A = b.new(m, k) if b.rng.random() < 0.5 else b.new(k, m).T
+    B = b.new(k, n) if b.rng.random() < 0.5 else b.new(n, k).T
+    C = b.new(m, n)
+    mm = A @ B
+    return ((mm * C) if b.rng.random() < 0.5 else (C * mm)).sum()
+
+
+def _term_mm(b: _CaseBuilder):
+    """sum(A@B) — the sum-of-product factoring target."""
+    m, k, n = b.dims(3)
+    return (b.new(m, k) @ b.new(k, n)).sum()
+
+
+def _term_tsum(b: _CaseBuilder):
+    """sum(Aᵀ) (or sum_sq/min/max) — the transpose push-down target."""
+    m, n = b.dims(2)
+    A = b.new(m, n)
+    agg = ("sum", "sum_sq", "min", "max")[int(b.rng.integers(4))]
+    return A.T._agg(agg, "full")
+
+
+def _term_addsplit(b: _CaseBuilder):
+    """sum(A ± B) or sum(A ± s) — the sum-over-add target."""
+    m, n = b.dims(2)
+    A = b.new(m, n)
+    other = b.new(m, n) if b.rng.random() < 0.6 else b.scalar()
+    e = (A + other) if b.rng.random() < 0.5 else (A - other)
+    return e.sum()
+
+
+def _term_scalar(b: _CaseBuilder):
+    """sum(A ⊙ s) / sum(A / s) — the scalar-hoist target."""
+    m, n = b.dims(2)
+    A = b.new(m, n)
+    s = b.scalar()
+    r = b.rng.random()
+    return (A * s).sum() if r < 0.5 else (A / s).sum()
+
+
+def _term_chain(b: _CaseBuilder):
+    """Generic element-wise chain — mostly rule-inert, keeps the fuzzer
+    honest about DAGs where no rewrite fires (or only part of the DAG
+    rewrites)."""
+    m, n = b.dims(2)
+    A, B = b.new(m, n), b.new(m, n)
+    return (ir.relu(A * B + b.scalar()) * A).sum()
+
+
+_TERMS = (_term_rotate, _term_mm, _term_tsum, _term_addsplit,
+          _term_scalar, _term_chain)
+
+
+def random_case(seed: int, fmt: str = "dense"):
+    """One seeded fuzzer case: ``(graph, bindings, grad_names)``.
+
+    The expression is 1–3 scalar terms (each drawn from the rule-target
+    patterns above) combined with +/− and an occasional scalar scale.
+    ``fmt="bcsr"`` makes the case a single sum-of-matmul-product term
+    whose left matmul operand is a real block-sparse BCSR (gradients are
+    skipped for sparse cases — the sparse dispatch path is forward-only).
+    """
+    rng = np.random.default_rng(seed)
+    b = _CaseBuilder(rng)
+    if fmt == "bcsr":
+        m, k, n = b.dims(3)
+        A = b.new_bcsr(m, k)
+        mm = A @ b.new(k, n)
+        expr = ((mm * b.new(m, n)).sum() if rng.random() < 0.5
+                else mm.sum())
+        graph = ir.Graph.build([expr])
+        return graph, b.bindings, []
+    n_terms = int(rng.integers(1, 4))
+    terms = []
+    for _ in range(n_terms):
+        t = _TERMS[int(rng.integers(len(_TERMS)))](b)
+        if rng.random() < 0.3:
+            t = t * b.scalar()
+        terms.append(t)
+    expr = terms[0]
+    for t in terms[1:]:
+        expr = (expr + t) if rng.random() < 0.7 else (expr - t)
+    graph = ir.Graph.build([expr])
+    dense_names = sorted(b.bindings)
+    k = min(len(dense_names), 1 + int(rng.integers(2)))
+    idx = rng.choice(len(dense_names), size=k, replace=False)
+    grad_names = [dense_names[int(i)] for i in sorted(idx)]
+    return graph, b.bindings, grad_names

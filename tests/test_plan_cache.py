@@ -231,6 +231,33 @@ def test_staged_pipeline_thread_hammer_no_duplicate_compiles():
             np.testing.assert_array_equal(got, ref)
 
 
+def test_rewrite_variant_identity_in_cache_keys():
+    """A rewritten region must never be served a staged function cached
+    for the original DAG (or vice versa): the winning rule chain is part
+    of the whole-plan key, and the per-operator layer keys the variant's
+    own (structurally different) CPlans.  The fit-terms form rewrites to
+    sum((X@B)⊙Y); with rewriting off the same trace plans the original
+    two-operator DAG — same @fused source, different plans, both correct."""
+    WHOLE_PLAN_CACHE.clear()
+    from repro.core.codegen import staged_plan_key
+    X, B, Y = arr(10_000, 100), arr(100, 5) * 0.1, arr(10_000, 5)
+    f = fused(lambda X, B, Y: (B * (X.T @ Y)).sum())
+    p_rw = f.trace(X, B, Y).plan(mode="gen")
+    with fusion_mode("gen", rewrite=False):
+        p_orig = f.trace(X, B, Y).plan(mode="gen")
+    assert p_rw.eplan.rewrite != ()                 # the rewrite won
+    assert p_orig.eplan.rewrite == ()
+    k_rw = staged_plan_key(p_rw.eplan, pallas="never")
+    k_orig = staged_plan_key(p_orig.eplan, pallas="never")
+    assert k_rw != k_orig
+    # both compile, populate distinct whole-plan entries, and agree
+    out_rw = p_rw.compile(staged=True)(X, B, Y)
+    out_orig = p_orig.compile(staged=True)(X, B, Y)
+    assert whole_plan_cache_stats().misses >= 2     # no cross-serving
+    np.testing.assert_allclose(np.asarray(out_rw), np.asarray(out_orig),
+                               rtol=2e-4, atol=2e-4)
+
+
 def test_plan_cache_stats_snapshot():
     PLAN_CACHE.clear()
     X = arr(10, 10)

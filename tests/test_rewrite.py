@@ -1,0 +1,396 @@
+"""Rewrite-based plan exploration (SPORES-style): rule semantics, the
+trace→plan sweep, RW verifier invariants, cache keying, and the
+differential equivalence fuzzer.
+
+The fuzzer is the PR's center of gravity: seeded random HOP DAGs
+(``diffharness.random_case``) where every variant the bounded rule set
+generates must (a) verify strict-clean (RW001–RW004 + the IR checks) and
+(b) execute to 1e-5 parity with the original — forward and ``jax.grad``,
+across fusion modes and dense/BCSR operand formats.  The smoke tier runs
+50 cases in the fast CI job; the deep sweep (``@slow``) runs
+``REPRO_FUZZ_CASES`` (default 200) in the full job.
+
+    REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_rewrite.py
+"""
+
+import json
+import os
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from diffharness import assert_equivalent, plan_and_execute, random_case
+from repro.core import fused, fusion_mode, ir
+from repro.core.rewrite import (RULES, MAX_VARIANTS, graph_digest,
+                                rewrite_variants)
+from repro.core.select import MODES
+from repro.core.verify import verify_rewrite, verify_variant
+
+GOLDEN = Path(__file__).parent / "golden" / "explain_rewrite_mlogreg.json"
+
+rng = np.random.default_rng(11)
+
+
+def arr(*shape, scale=0.3):
+    return (rng.normal(size=shape) * scale).astype(np.float32)
+
+
+def _fit_graph(m=64, n=16, k=8):
+    """sum(B ⊙ (XᵀY)) — the mlogreg sufficient-statistic form."""
+    X, B, Y = ir.matrix("X", (m, n)), ir.matrix("B", (n, k)), \
+        ir.matrix("Y", (m, k))
+    return ir.Graph.build([(B * (X.T @ Y)).sum()])
+
+
+# --------------------------------------------------------------------------
+# rule-level: each rule generates the documented variant, numerically equal
+# --------------------------------------------------------------------------
+
+def _assert_all_variants_equivalent(graph, bindings, grad_wrt=(),
+                                    mode="gen"):
+    variants = rewrite_variants(graph)
+    assert variants, "expected the rule set to fire on this DAG"
+    for v in variants:
+        assert verify_variant(graph, v.graph, level="strict").ok
+        assert_equivalent(graph, v.graph, bindings, grad_wrt=grad_wrt,
+                          mode=mode, label="+".join(v.rules))
+    return variants
+
+
+def test_spores_rotate_variants_and_parity():
+    g = _fit_graph()
+    b = {"X": arr(64, 16), "B": arr(16, 8), "Y": arr(64, 8)}
+    variants = _assert_all_variants_equivalent(g, b, grad_wrt=["B"])
+    rules = {r for v in variants for r in v.rules}
+    assert any(r.startswith("spores_rotate@") for r in rules)
+    # the rotation eliminating the (n,k) intermediate exists: a variant
+    # whose largest mul runs at (m,k) — sum((X@B) ⊙ Y)
+    assert any(any(n.op == "mul" and n.shape == (64, 8)
+                   for n in v.graph.nodes) for v in variants)
+
+
+def test_sum_transpose_removes_dead_t():
+    A = ir.matrix("A", (24, 8))
+    g = ir.Graph.build([A.T.sum()])
+    variants = _assert_all_variants_equivalent(
+        g, {"A": arr(24, 8)}, grad_wrt=["A"])
+    assert any("sum_transpose@" in r for v in variants for r in v.rules)
+    assert any(all(n.op != "t" for n in v.graph.nodes) for v in variants)
+
+
+def test_sum_mm_factor_parity():
+    A, B = ir.matrix("A", (32, 16)), ir.matrix("B", (16, 24))
+    g = ir.Graph.build([(A @ B).sum()])
+    variants = _assert_all_variants_equivalent(
+        g, {"A": arr(32, 16), "B": arr(16, 24)}, grad_wrt=["A", "B"])
+    assert any("sum_mm_factor@" in r for v in variants for r in v.rules)
+
+
+def test_sum_add_split_matrix_and_scalar():
+    A, B = ir.matrix("A", (16, 16)), ir.matrix("B", (16, 16))
+    g = ir.Graph.build([(A + B).sum()])
+    vs = _assert_all_variants_equivalent(
+        g, {"A": arr(16, 16), "B": arr(16, 16)}, grad_wrt=["A"])
+    assert any("sum_add_split@" in r for v in vs for r in v.rules)
+    # scalar operand: sum(A − s) = sum(A) − ncells·s
+    g2 = ir.Graph.build([(A - 1.25).sum()])
+    _assert_all_variants_equivalent(g2, {"A": arr(16, 16)},
+                                    grad_wrt=["A"])
+
+
+def test_scalar_hoist_mul_and_div():
+    A = ir.matrix("A", (16, 32))
+    for expr in [(A * 2.5).sum(), (A / 1.5).sum()]:
+        g = ir.Graph.build([expr])
+        vs = _assert_all_variants_equivalent(g, {"A": arr(16, 32)},
+                                             grad_wrt=["A"])
+        assert any("scalar_hoist@" in r for v in vs for r in v.rules)
+
+
+def test_engine_deterministic_across_traces():
+    """Two independent builds of the same expression yield identical
+    variant chains and digests (topo-index labels, not node ids)."""
+    v1 = rewrite_variants(_fit_graph())
+    v2 = rewrite_variants(_fit_graph())
+    assert [v.rules for v in v1] == [v.rules for v in v2]
+    assert [v.digest for v in v1] == [v.digest for v in v2]
+    assert len({v.digest for v in v1}) == len(v1)      # digest-deduped
+    assert len({v.rules for v in v1}) == len(v1)       # unique labels
+
+
+def test_engine_bounded():
+    vs = rewrite_variants(_fit_graph(), max_variants=2)
+    assert len(vs) <= 2
+    assert len(rewrite_variants(_fit_graph())) <= MAX_VARIANTS
+    # rule-inert DAG: no variants, no wasted work
+    A = ir.matrix("A", (8, 8))
+    assert rewrite_variants(ir.Graph.build([ir.relu(A) @ A])) == []
+
+
+# --------------------------------------------------------------------------
+# the sweep: argmin across variants, explain(), winning-chain plumbing
+# --------------------------------------------------------------------------
+
+def test_sweep_selects_rotated_variant_with_lower_cost():
+    """The acceptance-criterion win: for sum(B⊙(XᵀY)) at paper shapes the
+    sweep selects a SPORES rotation with strictly lower modeled cost than
+    the best plan of the DAG as written, and explain() names the chain."""
+    f = fused(lambda X, B, Y: (B * (X.T @ Y)).sum())
+    shaped = (np.zeros((10_000, 100), np.float32),
+              np.zeros((100, 5), np.float32),
+              np.zeros((10_000, 5), np.float32))
+    planned = f.trace(*shaped).plan(mode="gen")
+    rw = planned.explain()["rewrite"]
+    assert rw["enabled"] and rw["n_variants"] >= 1
+    assert rw["winner"]["rules"], "a rewrite must win at these shapes"
+    assert rw["winner"]["cost"] < rw["winner"]["baseline_cost"]
+    assert rw["winner"]["improvement"] > 0
+    assert tuple(planned.eplan.rewrite) == tuple(rw["winner"]["rules"])
+    # the report is internally consistent: exactly one selected variant,
+    # and it is the cheapest planned entry
+    sel = [e for e in rw["variants"] if e["selected"]]
+    assert len(sel) == 1 and sel[0]["rules"] == rw["winner"]["rules"]
+    assert sel[0]["cost"] == min(e["cost"] for e in rw["variants"])
+
+
+def test_sweep_keeps_original_when_no_rule_wins():
+    """A DAG the planner already handles optimally keeps chain () and
+    reports the sweep faithfully."""
+    f = fused(lambda X, w: (ir.relu(X @ w) ** 2).sum())
+    planned = f.trace(np.zeros((256, 16), np.float32),
+                      np.zeros((16, 1), np.float32)).plan(mode="gen")
+    assert planned.eplan.rewrite == ()
+    rw = planned.explain()["rewrite"]
+    assert rw["enabled"]
+    assert rw["winner"]["rules"] == []
+    assert rw["winner"]["improvement"] == 0
+
+
+def test_rewrite_disabled_context():
+    f = fused(lambda X, B, Y: (B * (X.T @ Y)).sum())
+    shaped = (np.zeros((10_000, 100), np.float32),
+              np.zeros((100, 5), np.float32),
+              np.zeros((10_000, 5), np.float32))
+    with fusion_mode("gen", rewrite=False):
+        planned = f.trace(*shaped).plan()
+    assert planned.eplan.rewrite == ()
+    assert planned.explain()["rewrite"] == {"enabled": False}
+
+
+def test_winner_executes_and_differentiates():
+    """End to end through the call sugar: the region whose plan is a
+    rewritten variant computes the right numbers, fwd and grad."""
+    import jax
+    import jax.numpy as jnp
+    X, B, Y = (jnp.asarray(arr(64, 16)), jnp.asarray(arr(16, 8)),
+               jnp.asarray(arr(64, 8)))
+    f = fused(lambda X, B, Y: (B * (X.T @ Y)).sum())
+    planned = f.trace(X, B, Y).plan(mode="gen")
+    assert planned.eplan.rewrite            # a variant won at these shapes
+    c = planned.compile()
+    np.testing.assert_allclose(np.asarray(c(X, B, Y)),
+                               np.asarray(jnp.sum(B * (X.T @ Y))
+                                          ).reshape(1, 1),
+                               rtol=1e-5, atol=1e-5)
+    g = jax.grad(lambda b: c(X, b, Y)[0, 0])(B)
+    g_ref = jax.grad(lambda b: jnp.sum(b * (X.T @ Y)))(B)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_algo_fit_terms_region_wins():
+    """The shipped mlogreg._fit_terms region selects a rewritten plan at
+    the paper shapes fusionlint uses."""
+    from repro.algos import mlogreg
+    eplan = mlogreg._fit_terms.plan_for(
+        X=np.zeros((10_000, 100), np.float32),
+        B=np.zeros((100, 5), np.float32),
+        Y=np.zeros((10_000, 5), np.float32))
+    assert eplan.rewrite != ()
+
+
+# --------------------------------------------------------------------------
+# RW verifier: corruption tests pinning each invariant code
+# --------------------------------------------------------------------------
+
+def _codes(diags):
+    return {d.code for d in diags}
+
+
+def test_rw001_output_arity():
+    A = ir.matrix("A", (8, 8))
+    g = ir.Graph.build([A.sum()])
+    bad = ir.Graph.build([A.sum(), A.rowsums()])
+    assert "RW001" in _codes(verify_rewrite(g, bad))
+
+
+def test_rw002_shape_change():
+    A = ir.matrix("A", (8, 8))
+    g = ir.Graph.build([A.sum()])
+    bad = ir.Graph.build([A.rowsums()])          # (8,1), not (1,1)
+    diags = verify_rewrite(g, bad)
+    assert "RW002" in _codes(diags)
+    assert not verify_variant(g, bad).ok
+
+
+def test_rw003_input_set_change():
+    A, B = ir.matrix("A", (8, 8)), ir.matrix("B", (8, 8))
+    g = ir.Graph.build([A.sum()])
+    bad = ir.Graph.build([B.sum()])              # renamed input
+    assert "RW003" in _codes(verify_rewrite(g, bad))
+    # same name, different operand shape
+    A2 = ir.matrix("A", (16, 8))
+    bad2 = ir.Graph.build([A2.sum()])
+    diags = verify_rewrite(g, bad2)
+    assert "RW003" in _codes(diags)
+
+
+def test_rw004_zero_preservation_lost():
+    """Original sum(A⊙s) is zero-forced by A (and by s); a corrupt
+    'rewrite' sum(A)+s loses both forcings → RW004."""
+    A, s = ir.matrix("A", (8, 8)), ir.matrix("s", (1, 1))
+    g = ir.Graph.build([(A * s).sum()])
+    bad = ir.Graph.build([A.sum() + s])
+    diags = verify_rewrite(g, bad)
+    assert "RW004" in _codes(diags)
+    assert not verify_variant(g, bad).ok
+
+
+def test_clean_variant_passes_all_rw():
+    g = _fit_graph()
+    for v in rewrite_variants(g):
+        rep = verify_variant(g, v.graph, level="strict")
+        assert rep.ok, rep.pretty()
+
+
+def test_illegal_rule_rejected_not_planned(monkeypatch):
+    """A shape-changing rule application must be *rejected* by the sweep
+    (recorded with its RW codes), never planned or selected."""
+    from repro.core import rewrite as rw_mod
+
+    def bad_rule(node):
+        if node.is_agg and node.agg_axis == "full" and node.op == "sum":
+            # "rewrite" the full sum into rowsums — shape-changing
+            return [ir.Expr(node.inputs[0]).rowsums().node]
+        return []
+
+    real_variants = rw_mod.rewrite_variants
+
+    def bad_variants(graph, *a, **k):
+        return real_variants(graph, rules=(("bad", bad_rule),))
+
+    monkeypatch.setattr("repro.core.rewrite.rewrite_variants",
+                        bad_variants)
+    f = fused(lambda A: (A * 2.0).sum())
+    planned = f.trace(np.zeros((16, 16), np.float32)).plan(mode="gen")
+    assert planned.eplan.rewrite == ()           # the original won
+    rw = planned.explain()["rewrite"]
+    assert rw["n_planned"] == 0 and rw["n_rejected"] >= 1
+    assert any("RW002" in r["errors"] for r in rw["rejected"])
+    # the planned graph is the original — a full (1,1) aggregate root
+    assert planned.eplan.graph.outputs[0].shape == (1, 1)
+
+
+# --------------------------------------------------------------------------
+# cache keying: variant identity in the whole-plan key
+# --------------------------------------------------------------------------
+
+def test_variant_identity_in_whole_plan_key():
+    from repro.core.codegen import staged_plan_key
+    f = fused(lambda X, B, Y: (B * (X.T @ Y)).sum())
+    shaped = (np.zeros((10_000, 100), np.float32),
+              np.zeros((100, 5), np.float32),
+              np.zeros((10_000, 5), np.float32))
+    p_rw = f.trace(*shaped).plan(mode="gen")
+    with fusion_mode("gen", rewrite=False):
+        p_orig = f.trace(*shaped).plan()
+    assert p_rw.eplan.rewrite != () and p_orig.eplan.rewrite == ()
+    k_rw = staged_plan_key(p_rw.eplan)
+    k_orig = staged_plan_key(p_orig.eplan)
+    assert k_rw != k_orig
+    assert k_rw[-1] == tuple(p_rw.eplan.rewrite)
+    assert k_orig[-1] == ()
+
+
+# --------------------------------------------------------------------------
+# the differential fuzzer
+# --------------------------------------------------------------------------
+
+def _fuzz_one(seed: int):
+    """One fuzzer case: every variant strict-clean + executes to parity
+    with the original (fwd + grad), mode cycled per seed."""
+    graph, bindings, grad_names = random_case(seed)
+    mode = MODES[seed % len(MODES)]
+    variants = rewrite_variants(graph, max_variants=8)
+    for v in variants:
+        rep = verify_variant(graph, v.graph, level="strict")
+        assert rep.ok, f"seed {seed} {v.rules}: {rep.pretty()}"
+        assert_equivalent(graph, v.graph, bindings, grad_wrt=grad_names,
+                          mode=mode,
+                          label=f"seed {seed} {'+'.join(v.rules)}")
+    return len(variants)
+
+
+def _fuzz_one_bcsr(seed: int):
+    graph, bindings, _ = random_case(seed, fmt="bcsr")
+    variants = rewrite_variants(graph, max_variants=4)
+    for v in variants:
+        rep = verify_variant(graph, v.graph, level="strict")
+        assert rep.ok, f"bcsr seed {seed} {v.rules}: {rep.pretty()}"
+        assert_equivalent(graph, v.graph, bindings, tol=2e-4,
+                          label=f"bcsr seed {seed} {'+'.join(v.rules)}")
+    return len(variants)
+
+
+def test_fuzzer_smoke_dense():
+    """Fast-CI tier: 50 seeded dense cases, zero parity or verification
+    failures, and the sweep must actually exercise the rule set."""
+    total = sum(_fuzz_one(seed) for seed in range(50))
+    assert total >= 50, "rule set barely fired — generator regressed?"
+
+
+def test_fuzzer_smoke_bcsr():
+    """Block-sparse operands: the rotation/factoring variants of DAGs
+    with a real BCSR matmul operand execute to parity (forward; the
+    sparse dispatch path is not differentiable)."""
+    total = sum(_fuzz_one_bcsr(seed) for seed in range(1000, 1008))
+    assert total >= 8
+
+
+@pytest.mark.slow
+def test_fuzzer_deep_sweep():
+    """Full-CI tier: REPRO_FUZZ_CASES seeded cases (default 200, ≥200 in
+    CI) across fusion modes, dense + BCSR."""
+    cases = int(os.environ.get("REPRO_FUZZ_CASES", "200"))
+    total = sum(_fuzz_one(seed) for seed in range(cases))
+    total += sum(_fuzz_one_bcsr(seed)
+                 for seed in range(2000, 2000 + max(8, cases // 25)))
+    assert total >= cases
+
+
+# --------------------------------------------------------------------------
+# golden pin: the winning rewrite + cost delta for mlogreg._fit_terms
+# --------------------------------------------------------------------------
+
+def test_explain_rewrite_golden_mlogreg():
+    from repro.algos import mlogreg
+    planned = mlogreg._fit_terms.trace(
+        np.zeros((10_000, 100), np.float32),
+        np.zeros((100, 5), np.float32),
+        np.zeros((10_000, 5), np.float32)).plan(mode="gen")
+    rw = planned.explain()["rewrite"]
+    for e in rw["variants"]:
+        e["cost"] = round(e["cost"], 14)
+    for k in ("cost", "baseline_cost", "improvement"):
+        rw["winner"][k] = round(rw["winner"][k], 14)
+    if os.environ.get("REGEN_GOLDEN"):
+        GOLDEN.write_text(json.dumps(rw, indent=2, sort_keys=True) + "\n")
+        pytest.skip(f"regenerated {GOLDEN}")
+    assert GOLDEN.exists(), \
+        "golden missing — run with REGEN_GOLDEN=1 to create it"
+    expected = json.loads(GOLDEN.read_text())
+    assert json.loads(json.dumps(rw, sort_keys=True)) == expected
+    # the pinned winner is a genuine rewrite win, locked against drift
+    assert expected["winner"]["rules"]
+    assert expected["winner"]["improvement"] > 0

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from diffharness import assert_staged_parity
 from repro.core import (FusionContext, fused, fusion_mode, ir,
                         plan_cache_stats, whole_plan_cache_stats)
 from repro.core.codegen import WHOLE_PLAN_CACHE
@@ -72,29 +73,11 @@ CASES = {"l2svm": _l2svm_case, "mlogreg": _mlogreg_case,
 
 
 @pytest.mark.parametrize("name", sorted(CASES))
-def test_forward_parity_staged_vs_per_op(name):
-    f, args, grad_arg = CASES[name]()
-    planned = f.trace(*args).plan(mode="gen")
-    out_staged = planned.compile(staged=True)(*args)
-    out_per_op = planned.compile(staged=False)(*args)
-    _close(out_staged, out_per_op)
-
-
-@pytest.mark.parametrize("name", sorted(CASES))
-def test_grad_parity_staged_vs_per_op(name):
+def test_parity_staged_vs_per_op(name):
+    """Forward + grad parity of the staged whole-plan path against the
+    per-operator debug path, via the shared differential harness."""
     f, args, gi = CASES[name]()
-    planned = f.trace(*args).plan(mode="gen")
-
-    def obj(op, v):
-        a = list(args)
-        a[gi] = v
-        return op(*a)[0, 0]
-
-    g_staged = jax.grad(lambda v: obj(planned.compile(staged=True), v))(
-        args[gi])
-    g_per_op = jax.grad(lambda v: obj(planned.compile(staged=False), v))(
-        args[gi])
-    _close(g_staged, g_per_op)
+    assert_staged_parity(f, args, grad_index=gi)
 
 
 def test_hybrid_layout_parity_staged_vs_per_op():
@@ -104,11 +87,10 @@ def test_hybrid_layout_parity_staged_vs_per_op():
     from repro.algos import mlogreg
     f, args, gi = _mlogreg_case()
     mesh = LogicalMesh({"data": 8})
-    planned = f.trace(*args).plan(mode="gen", layout=mesh)
+    planned = assert_staged_parity(f, args, grad_index=gi, layout=mesh)
     assert any(o.get("placement") == "distributed"
                for o in planned.explain()["winner"]["operators"])
-    _close(planned.compile(staged=True)(*args),
-           planned.compile(staged=False)(*args))
+    # the call-sugar path under a scoped mesh context agrees too
     with FusionContext(mode="gen", layout=mesh):
         g_staged = jax.grad(
             lambda B: mlogreg._nll_obj_reg(args[0], B, args[2],

@@ -21,8 +21,17 @@ cheap mode, and additionally enforces **no-silent-fallback**: every
 execution-time downgrade the compiled plan would take (distributed
 segment running locally, sparse operand refusing to shard, per-operator
 debug dispatch) must carry a nonempty recorded reason — a fallback
-entry without one is an error.  ``--verbose`` prints every clean plan
-and every explained fallback, not just a summary.
+entry without one is an error.  Strict mode also sweeps every region's
+**rewrite variants** (:mod:`repro.core.rewrite`): each algebraic
+variant the bounded rule set generates must pass the rewrite verifier
+(RW001–RW004 + the IR checks) strict-clean — a rule producing an
+invalid variant on the repo's own regions is an error even though
+``Traced.plan()`` would have quietly rejected it.  ``--verbose`` prints
+every clean plan and every explained fallback, not just a summary.
+
+Planning runs with rewriting enabled (the context default), so the
+verified ExecPlans are exactly the ones the sweep selects — including
+regions where a rewritten variant wins.
 
 ``--serving`` additionally warms a :class:`repro.serve.FusionServer`
 with the load harness's cases (``benchmarks.serving.harness_regions``)
@@ -81,6 +90,7 @@ def _cases(algo: str) -> list[tuple[str, object, dict]]:
             ("hvp", mlogreg._hvp, dict(X=X, v=v, P=P)),
             ("grad", mlogreg._grad, dict(X=X, P=P, Y=Y)),
             ("nll_terms", mlogreg._nll_terms, dict(P=P, Y=Y)),
+            ("fit_terms", mlogreg._fit_terms, dict(X=X, B=B, Y=Y)),
         ]
     if algo == "kmeans":
         from repro.algos import kmeans
@@ -148,6 +158,26 @@ def _check_fallbacks(eplan, layout, label: str,
     return len(entries), silent
 
 
+def _check_rewrites(graph, label: str, verbose: bool) -> tuple[int, int]:
+    """all-variants-verify-clean: every algebraic variant the rewrite
+    rule set generates for this region must pass the rewrite verifier
+    strict-clean.  Returns (variants, failing variants)."""
+    from repro.core.rewrite import rewrite_variants
+    from repro.core.verify import verify_variant
+
+    bad = 0
+    variants = rewrite_variants(graph)
+    for v in variants:
+        report = verify_variant(graph, v.graph, level="strict")
+        if not report.ok:
+            bad += 1
+            print(f"{label}: rewrite variant {'+'.join(v.rules)} "
+                  f"failed verification: {report.pretty()}")
+        elif verbose:
+            print(f"{label}: rewrite {'+'.join(v.rules)} clean")
+    return len(variants), bad
+
+
 def lint_serving(level: str, verbose: bool) -> tuple[int, list[str]]:
     """Verify the plans the serving harness compiles, reusing the warmed
     entry cache (``workers=0`` server: warm() plans and compiles without
@@ -182,10 +212,21 @@ def lint_serving(level: str, verbose: bool) -> tuple[int, list[str]]:
 def lint(algos: list[str], modes: list[str], level: str,
          verbose: bool, serving: bool = False) -> int:
     n_plans = n_errors = n_warnings = n_fallbacks = n_silent = 0
+    n_rewrites = n_rewrite_bad = 0
     failed: list[str] = []
     layouts = [("local", None), ("mesh[data=4]", _mesh())]
     for algo in algos:
         for region, wrapper, args in _cases(algo):
+            if level == "strict":
+                # once per region: every rewrite variant verify-clean
+                rlabel = f"{algo}/{region} [rewrite]"
+                total, bad = _check_rewrites(wrapper.trace(**args).graph,
+                                             rlabel, verbose)
+                n_rewrites += total
+                n_rewrite_bad += bad
+                if bad:
+                    n_errors += bad
+                    failed.append(rlabel)
             for mode in modes:
                 for lname, layout in layouts:
                     label = f"{algo}/{region} mode={mode} {lname}"
@@ -214,7 +255,8 @@ def lint(algos: list[str], modes: list[str], level: str,
         failed.extend(sfailed)
     print(f"fusionlint: {n_plans} plans verified [{level}] — "
           f"{n_errors} error(s), {n_warnings} warning(s)"
-          + (f", {n_fallbacks} fallback(s) ({n_silent} silent)"
+          + (f", {n_fallbacks} fallback(s) ({n_silent} silent), "
+             f"{n_rewrites} rewrite variant(s) ({n_rewrite_bad} unclean)"
              if level == "strict" else ""))
     if failed:
         print("failing plans:")
