@@ -4,14 +4,14 @@
 Usage::
 
     python benchmarks/compare.py BASELINE CURRENT \\
-        [--threshold 1.3] [--gate 'dispatch_chain*_whole_plan,serving_batched']
+        [--threshold 1.3] [--gate 'dispatch_chain*_whole_plan,serving_batched,serving_hardened']
 
 Both files are ``repro-bench-v1`` artifacts (``benchmarks.run --json``).
 Every row shared by both files is printed with its current/baseline
 ratio; rows whose name matches any of the comma-separated ``--gate``
 globs (default: the dispatch-overhead whole-plan medians plus the
-serving-throughput median — the staged backend's headline numbers)
-additionally *gate* the run: any gated row slower than ``threshold ×``
+serving-throughput median plus the hardened-serving overhead row —
+the staged backend's headline numbers) additionally *gate* the run: any gated row slower than ``threshold ×``
 its baseline, or missing from the current artifact, exits nonzero.
 Each glob must also match at least one baseline row, so a renamed
 benchmark cannot silently un-gate itself.  CI runs this against the
@@ -47,7 +47,8 @@ def main(argv=None) -> int:
                     help="fail when a gated row's us_per_call exceeds "
                          "threshold x baseline (default: 1.3)")
     ap.add_argument("--gate",
-                    default="dispatch_chain*_whole_plan,serving_batched",
+                    default="dispatch_chain*_whole_plan,serving_batched,"
+                            "serving_hardened",
                     help="comma-separated globs of row names that gate "
                          "the run (default: dispatch-overhead whole-plan "
                          "rows + the serving-throughput median)")

@@ -17,6 +17,12 @@ same compiled plans, no batching).  Emitted rows:
     speedup over per-request dispatch and the mean batch occupancy.
 ``serving_batched_p50`` / ``_p95`` / ``_p99``
     Submit-to-result latency percentiles (µs) under the batched run.
+``serving_hardened``
+    The batched workload with the fault-tolerance machinery engaged
+    (deadlines, retry budgets, bounded queue, circuit breaker, finite
+    checks — see docs/robustness.md) and zero faults injected: the
+    fault-free overhead of being prepared, gated like
+    ``serving_batched``.
 
 Both arms are warmed first (plan compile + every power-of-two batch
 class) so the run measures serving, not XLA builds.  Before timing, the
@@ -138,12 +144,23 @@ def run_load(server: FusionServer, cases, n_clients: int,
     }
 
 
+#: the fault-tolerance machinery engaged for the ``serving_hardened``
+#: arm: deadlines stamped per request, retry budgets, a bounded queue,
+#: the circuit breaker, and per-request finite-checking — everything
+#: docs/robustness.md describes, measured with zero faults injected so
+#: the row is the pure overhead of being prepared.
+HARDENED = dict(default_deadline_s=120.0, retry_budget=4,
+                max_queue=4096, check_finite=True,
+                breaker_threshold=3, breaker_cooldown_s=30.0)
+
+
 def _serve_arm(cases, *, max_batch: int, pad_to: int, n_clients: int,
-               reqs_per_client: int, parity: bool = False) -> dict:
+               reqs_per_client: int, parity: bool = False,
+               **server_kwargs) -> dict:
     regions = [(region, ops) for _l, region, ops in cases]
     sizes = [b for b in (1, 2, 4, 8, 16, 32) if b <= max_batch]
     with FusionServer(workers=WORKERS, max_batch=max_batch,
-                      pad_to=pad_to) as server:
+                      pad_to=pad_to, **server_kwargs) as server:
         server.warm(regions, batch_sizes=tuple(sizes))
         if parity:
             check_parity(server, cases)
@@ -173,14 +190,24 @@ def main(smoke: bool = False) -> None:
     unbatched = _serve_arm(cases, max_batch=1, pad_to=0,
                            n_clients=N_CLIENTS,
                            reqs_per_client=REQS_PER_CLIENT)
-    for arm in (batched, unbatched):
+    hardened = _serve_arm(cases, max_batch=MAX_BATCH, pad_to=PAD_TO,
+                          n_clients=N_CLIENTS,
+                          reqs_per_client=REQS_PER_CLIENT, parity=True,
+                          **HARDENED)
+    for arm in (batched, unbatched, hardened):
         assert arm["failed"] == 0, f"load run failed: {arm['errors'][:3]}"
 
     speedup = unbatched["us_per_req"] / batched["us_per_req"]
+    overhead = hardened["us_per_req"] / batched["us_per_req"]
     emit("serving_batched", batched["us_per_req"],
          f"x{speedup:.2f}_vs_unbatched_occ{batched['occupancy_mean']:.1f}")
     emit("serving_unbatched", unbatched["us_per_req"],
          f"{unbatched['throughput_rps']:.0f}rps")
+    # fault-free overhead of the self-healing configuration (deadlines,
+    # retry budgets, bounded queue, breaker, finite checks) — gated by
+    # compare.py so hardening cannot silently get expensive
+    emit("serving_hardened", hardened["us_per_req"],
+         f"x{overhead:.2f}_vs_batched")
     for q in ("p50", "p95", "p99"):
         emit(f"serving_batched_{q}", batched["latency_us"][q], "latency")
 

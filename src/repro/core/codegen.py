@@ -44,6 +44,7 @@ from typing import Callable, Optional
 
 import jax.numpy as jnp
 
+from repro import faults
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.kernels.blocksparse import (BCSR, DictCompressed, ShardedBCSR)
@@ -52,6 +53,16 @@ from .cplan import CPlan, NO_AGG, build_cplan
 from .ir import Graph, Node
 from .partitions import PlanInvariantError
 from .select import ExecPlan, MultiAggSpec
+
+
+faults.register_site(
+    "plan.jit_build",
+    "whole-plan XLA build: jit(plan_fn) / jit(vmap(plan_fn)) inside the "
+    "whole-plan cache builder (first call per structural plan key)",
+    kinds=("error", "latency"),
+    handler="FusionServer._entry build ladder (batched → exact-shape → "
+            "per-op) + build circuit breaker; failed builds are not "
+            "cached, so retries rebuild")
 
 
 def _mesh_of(layout):
@@ -719,9 +730,12 @@ class CompiledPlan:
         # build-once under concurrency: racing threads compiling
         # structurally-equal plans share one jitted function (and with
         # it one XLA executable per shape signature)
+        def _build():
+            faults.fault_point("plan.jit_build")
+            return jax.jit(plan_fn)
+
         jitted = WHOLE_PLAN_CACHE.get_or_create(
-            key, lambda: jax.jit(plan_fn),
-            extra_build_s=time.perf_counter() - t0)
+            key, _build, extra_build_s=time.perf_counter() - t0)
         return jitted, plan_fn
 
     def batched_callable(self) -> Callable:
@@ -742,8 +756,12 @@ class CompiledPlan:
         import jax
         _fn, raw = self.staged_callable()
         key = ("vmap", self._staged_key)
-        return WHOLE_PLAN_CACHE.get_or_create(
-            key, lambda: jax.jit(jax.vmap(raw)))
+
+        def _build():
+            faults.fault_point("plan.jit_build")
+            return jax.jit(jax.vmap(raw))
+
+        return WHOLE_PLAN_CACHE.get_or_create(key, _build)
 
     # -- per-operator fallback path ----------------------------------------
 

@@ -65,11 +65,21 @@ from typing import Callable, Optional
 
 import jax
 
+from repro import faults
 from repro.core.cplan import CPlan, NO_AGG
 from repro.core.partitions import PlanInvariantError
 from . import ops as kops
 from .blocksparse import BCSR, DictCompressed, ShardedBCSR, \
     partition_block_rows
+
+faults.register_site(
+    "dist.segment",
+    "distributed segment planning (plan_segment): eager compile-time "
+    "validation of a shard_map segment against the mesh",
+    kinds=("error", "latency"),
+    handler="an injected error degrades to SegmentFallback — the caller "
+            "records it via CompiledPlan.record_fallback (EXE005) and "
+            "the members run as local fused steps, numerically exact")
 
 #: structural cache of compiled shard_map operators — the distributed
 #: analogue of the plan cache: ``jax.jit`` memoizes per function object,
@@ -147,6 +157,10 @@ def plan_segment(items: list[SegmentItem], mesh):
     Raises :class:`~repro.core.partitions.PlanInvariantError` when the
     segment itself is malformed (an operand both sharded and broadcast
     across members), which ``annotate_segments`` never emits."""
+    try:
+        faults.fault_point("dist.segment")
+    except faults.FaultInjected as e:
+        return SegmentFallback(f"injected fault: {e}")
     try:
         from jax.sharding import Mesh
     except ImportError:                            # pragma: no cover

@@ -26,11 +26,22 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import faults
 from repro.core.cplan import (CPlan, COL_AGG, FULL_AGG, LEFT_MM, NO_AGG,
                               RIGHT_MM, ROW_AGG)
 from repro.core.templates import TType
 from . import ref
 from .blocksparse import BCSR, DictCompressed
+
+faults.register_site(
+    "kernels.pallas_call",
+    "generated-kernel dispatch when a Pallas path is selected "
+    "(pallas != 'never'): fires while the fused operator is traced into "
+    "the surrounding jit, i.e. at build time of the enclosing plan",
+    kinds=("error", "latency"),
+    handler="per-plan: FusionServer build ladder retries the plan at a "
+            "lower tier; per-op: compile_plan(strict) surfaces the error "
+            "to the caller — never cached, retries re-dispatch")
 
 
 # --------------------------------------------------------------------------
@@ -47,6 +58,8 @@ def execute(cplan: CPlan, env: dict[int, object], *,
     derive their grids and BlockSpecs from it (largest divisor ≤ the
     template's tile target) instead of the global-tuned defaults, so the
     generated kernels lower as ``pallas_call`` inside the region."""
+    if pallas != "never":
+        faults.fault_point("kernels.pallas_call")
     main = env.get(cplan.main.nid)
     if isinstance(main, DictCompressed):
         out = _execute_dict(cplan, env)

@@ -1,11 +1,18 @@
-from .engine import AdmissionError, Engine, Request
-from .fusion import (FusionServeError, FusionServer, PadReport,
-                     ServerClosedError, pad_safety)
+from .engine import Engine, Request
+from .errors import (AdmissionError, DeadlineExceededError,
+                     FusionServeError, NonFiniteOutputError,
+                     PlanCompileError, PlanQuarantinedError,
+                     QueueFullError, RequestFailedError, ServerClosedError)
+from .fusion import (CircuitBreaker, FusionServer, PadReport, pad_safety)
 from .metrics import Reservoir, ServerMetrics, percentiles
 
 __all__ = [
-    "Engine", "Request", "AdmissionError",
-    "FusionServer", "FusionServeError", "ServerClosedError",
+    "Engine", "Request",
+    "FusionServer", "CircuitBreaker",
+    # one error taxonomy for both servers (serve/errors.py)
+    "FusionServeError", "ServerClosedError", "AdmissionError",
+    "QueueFullError", "DeadlineExceededError", "PlanQuarantinedError",
+    "PlanCompileError", "RequestFailedError", "NonFiniteOutputError",
     "PadReport", "pad_safety",
     "ServerMetrics", "Reservoir", "percentiles",
 ]

@@ -10,6 +10,7 @@ dry-run lowers for the decode_*/long_* cells.
 from __future__ import annotations
 
 import queue
+import time
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -20,14 +21,11 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.launch.serve import make_prefill_step, make_serve_step
 from repro.models import LM
+from .errors import (AdmissionError, DeadlineExceededError,
+                     QueueFullError)
 
-
-class AdmissionError(ValueError):
-    """Raised by :meth:`Engine.submit` for requests that can never be
-    served: prompts too long for the KV cache, or ``max_new`` ≤ 0.
-    Admission-checking at submit time keeps the step loop free of
-    per-slot validity cases (an over-long prompt would otherwise prefill
-    past the cache and mis-handle at the first step boundary)."""
+__all__ = ["AdmissionError", "DeadlineExceededError", "QueueFullError",
+           "Engine", "Request"]
 
 
 @dataclass
@@ -37,6 +35,12 @@ class Request:
     temperature: float = 0.0
     out: list = field(default_factory=list)
     done: bool = False
+    #: per-request deadline (seconds from submit; None: engine default).
+    #: An expired request finishes with ``done=True`` and ``error`` set
+    #: to DeadlineExceededError instead of silently decoding forever.
+    deadline_s: Optional[float] = None
+    error: Optional[Exception] = None
+    _deadline_at: Optional[float] = field(default=None, repr=False)
 
 
 class Engine:
@@ -49,8 +53,11 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
                  max_len: int = 512, seed: int = 0, mesh=None,
-                 layout: str = "fixed"):
+                 layout: str = "fixed", max_queue: int = 0,
+                 default_deadline_s: Optional[float] = None):
         self.cfg = cfg
+        self.max_queue = max(0, int(max_queue))
+        self.default_deadline_s = default_deadline_s
         self.model = LM(cfg)
         self.max_len = max_len
         self.slots: list[Optional[Request]] = [None] * batch_slots
@@ -62,7 +69,8 @@ class Engine:
         self.params = params
         self._prefill = jax.jit(make_prefill_step(self.model, cfg))
         self._decode = jax.jit(make_serve_step(self.model, cfg))
-        self._queue: "queue.Queue[Request]" = queue.Queue()
+        self._queue: "queue.Queue[Request]" = queue.Queue(
+            maxsize=self.max_queue)
         self._key = jax.random.PRNGKey(seed)
 
     def _shard(self, mesh, layout: str, params, batch_slots: int):
@@ -94,7 +102,10 @@ class Engine:
         """Enqueue ``req`` for the next free slot.  Rejects impossible
         requests with :class:`AdmissionError` *here* — the decode loop
         assumes every admitted request fits (``pos < max_len - 1`` must
-        hold after prefill for at least one decode step)."""
+        hold after prefill for at least one decode step).  A full
+        bounded queue (``max_queue`` > 0) rejects with
+        :class:`QueueFullError`; the request's deadline (``deadline_s``
+        or the engine default) starts counting at submit."""
         if req.max_new <= 0:
             raise AdmissionError(
                 f"max_new must be >= 1, got {req.max_new}")
@@ -106,21 +117,46 @@ class Engine:
                 f"prompt length {P} exceeds the cache budget: max_len="
                 f"{self.max_len} leaves room for at most {self.max_len - 1} "
                 "prompt tokens plus one decode step")
-        self._queue.put(req)
+        deadline = req.deadline_s if req.deadline_s is not None \
+            else self.default_deadline_s
+        if deadline is not None:
+            req._deadline_at = time.perf_counter() + float(deadline)
+        try:
+            self._queue.put_nowait(req)
+        except queue.Full:
+            raise QueueFullError(
+                f"admission queue is full ({self.max_queue} requests); "
+                "shed load or retry with backoff") from None
+
+    @staticmethod
+    def _expired(req: Request) -> bool:
+        return req._deadline_at is not None and \
+            time.perf_counter() > req._deadline_at
+
+    def _fail_deadline(self, req: Request) -> None:
+        req.error = DeadlineExceededError(
+            f"deadline passed after {len(req.out)} of {req.max_new} "
+            "tokens")
+        req.done = True
 
     def _admit(self) -> None:
         for i, slot in enumerate(self.slots):
-            if slot is not None or self._queue.empty():
+            if slot is not None:
                 continue
-            req = self._queue.get()
-            self.slots[i] = req
-            P = len(req.prompt)
-            # prefill this slot (batch-1 prefill into slot i's cache rows)
-            toks = jnp.asarray(req.prompt, jnp.int32)[None]
-            sub_model_cache = self._slot_cache(i)
-            _, new_cache = self._prefill(self.params, toks, sub_model_cache)
-            self._write_slot_cache(i, new_cache)
-            self.pos[i] = P
+            while not self._queue.empty():
+                req = self._queue.get()
+                if self._expired(req):   # expired while queued: no slot
+                    self._fail_deadline(req)
+                    continue
+                self.slots[i] = req
+                P = len(req.prompt)
+                # prefill slot (batch-1 prefill into slot i's cache rows)
+                toks = jnp.asarray(req.prompt, jnp.int32)[None]
+                sub = self._slot_cache(i)
+                _, new_cache = self._prefill(self.params, toks, sub)
+                self._write_slot_cache(i, new_cache)
+                self.pos[i] = P
+                break
 
     def _slot_cache(self, i: int):
         def slot(leaf):
@@ -158,6 +194,10 @@ class Engine:
         # decode advances every slot at its own position: step per slot
         for i in active:
             req = self.slots[i]
+            if self._expired(req):       # deadline: evict at the boundary
+                self._fail_deadline(req)
+                self.slots[i] = None
+                continue
             tok = jnp.asarray(last[i:i + 1], jnp.int32)
             sub = self._slot_cache(i)
             nxt, logits, sub = self._decode(self.params, sub, tok,

@@ -55,6 +55,24 @@ batch occupancy, per-bucket counters, and cache stats — exported by
 (``benchmarks/serving.py``) drives N simulated clients against the
 l2svm/mlogreg scoring regions and records serving throughput and tail
 latency in ``BENCH_fusion.json``.
+
+**Fault tolerance** (``docs/robustness.md``).  The server assumes
+compiles, dispatches, and worker threads *fail*: a failed batched
+dispatch bisects so one poison request fails only its own future, then
+re-executes down a **degradation ladder** (batched → exact-shape
+staged → per-op ``staged=False``) under a per-request retry budget and
+optional deadline; repeatedly-failing plan digests are quarantined by a
+**circuit breaker** (closed → open → half-open probe);
+``max_queue`` bounds the admission queue with typed
+:class:`~repro.serve.errors.QueueFullError` backpressure; a crashed
+worker thread requeues its in-flight batch and respawns.  Every
+degradation is explicit and counted — the run-time extension of the
+plan-time no-silent-fallback discipline (EXE005): the metrics layer
+keeps a runtime-fallback ledger mirroring ``record_fallback``.  The
+seeded chaos harness (:mod:`repro.faults`, ``tests/test_faults.py``)
+exercises all of it deterministically; with no schedule installed each
+fault point is a single global read, keeping resilience off the hot
+path (``serving_hardened`` in ``benchmarks/serving.py`` gates that).
 """
 
 from __future__ import annotations
@@ -70,24 +88,36 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import faults
 from repro.core import ir
 from repro.core.api import Compiled, Planned, _canon_shape, _canon_value
 from repro.core.codegen import (PLAN_CACHE, WHOLE_PLAN_CACHE,
                                 WholePlanCache)
 from repro.core.context import FusionContext, current_context
 from repro.kernels.blocksparse import BCSR, DictCompressed
+from .errors import (AdmissionError, DeadlineExceededError,
+                     FusionServeError, NonFiniteOutputError,
+                     PlanCompileError, PlanQuarantinedError,
+                     QueueFullError, RequestFailedError, ServerClosedError)
 from .metrics import ServerMetrics
 
+faults.register_site(
+    "serve.batch_dispatch",
+    "vmap-batched (or exact/per-op degraded) dispatch of one serving "
+    "batch in a worker thread — the runtime execution site",
+    kinds=("error", "nonfinite", "latency"),
+    handler="degradation ladder: bisection isolates poison requests, "
+            "failed work re-executes batched → exact-shape → per-op "
+            "under the retry budget; repeated failures open the "
+            "per-digest circuit breaker")
 
-class FusionServeError(RuntimeError):
-    """Typed serving error raised at ``submit``/``warm`` time (bad
-    region object, unknown operands, closed server) — requests that
-    cannot be admitted are rejected here, never enqueued."""
-
-
-class ServerClosedError(FusionServeError):
-    """The server has been closed (or has no workers to drain the
-    queue); the request was not enqueued."""
+faults.register_site(
+    "serve.worker",
+    "worker loop body, after a batch is popped and before it executes",
+    kinds=("crash", "latency"),
+    handler="crash containment: in-flight tickets requeue at the front, "
+            "a replacement thread spawns (worker_respawns metric), the "
+            "pool never shrinks silently")
 
 
 # --------------------------------------------------------------------------
@@ -292,6 +322,114 @@ def _uncanon_np(v: np.ndarray):
 
 
 # --------------------------------------------------------------------------
+# circuit breaker
+# --------------------------------------------------------------------------
+
+class CircuitBreaker:
+    """Per-key (plan digest / build key) failure quarantine.
+
+    State machine per key: **closed** (normal; consecutive failures
+    count up) → **open** after ``threshold`` consecutive failures (every
+    ``allow`` rejects) → **half_open** once ``cooldown_s`` elapses (one
+    probe request is admitted; concurrent requests keep rejecting) →
+    **closed** on probe success / back to **open** on probe failure.
+    Success in any state resets the failure count."""
+
+    def __init__(self, threshold: int = 3, cooldown_s: float = 30.0,
+                 metrics: Optional[ServerMetrics] = None) -> None:
+        self.threshold = max(1, int(threshold))
+        self.cooldown_s = float(cooldown_s)
+        self.metrics = metrics
+        self._lock = threading.Lock()
+        self._keys: dict[str, dict] = {}
+
+    def _rec(self, key: str) -> dict:
+        rec = self._keys.get(key)
+        if rec is None:
+            rec = {"state": "closed", "fails": 0, "opened_at": 0.0,
+                   "probing": False, "opens": 0, "label": ""}
+            self._keys[key] = rec
+        return rec
+
+    def allow(self, key: str) -> tuple[bool, str]:
+        """(admit?, state).  Transitions open → half_open after the
+        cooldown and marks the admitted request as the probe."""
+        with self._lock:
+            rec = self._keys.get(key)
+            if rec is None or rec["state"] == "closed":
+                return True, "closed"
+            now = time.perf_counter()
+            if rec["state"] == "open":
+                if now - rec["opened_at"] < self.cooldown_s:
+                    return False, "open"
+                rec["state"] = "half_open"
+                rec["probing"] = False
+                if self.metrics is not None:
+                    self.metrics.on_breaker("probes")
+            if rec["probing"]:                  # one probe at a time
+                return False, "half_open"
+            rec["probing"] = True
+            return True, "half_open"
+
+    def cancel_probe(self, key: str) -> None:
+        """The admitted probe was never executed (e.g. rejected later
+        in submit): release the probe slot."""
+        with self._lock:
+            rec = self._keys.get(key)
+            if rec is not None:
+                rec["probing"] = False
+
+    def record_success(self, key: str) -> None:
+        with self._lock:
+            rec = self._keys.get(key)
+            if rec is None:
+                return                          # untracked: stay silent
+            closed = rec["state"] != "closed"
+            rec.update(state="closed", fails=0, probing=False)
+            if closed and self.metrics is not None:
+                self.metrics.on_breaker("closes")
+
+    def record_failure(self, key: str, label: str = "") -> None:
+        with self._lock:
+            rec = self._rec(key)
+            if label:
+                rec["label"] = label
+            rec["fails"] += 1
+            rec["probing"] = False
+            opened = False
+            if rec["state"] == "half_open":     # failed probe: re-open
+                opened = True
+            elif rec["state"] == "closed" and \
+                    rec["fails"] >= self.threshold:
+                opened = True
+            if opened:
+                rec["state"] = "open"
+                rec["opened_at"] = time.perf_counter()
+                rec["opens"] += 1
+                if self.metrics is not None:
+                    self.metrics.on_breaker("opens")
+
+    def state(self, key: str) -> str:
+        with self._lock:
+            rec = self._keys.get(key)
+            return rec["state"] if rec is not None else "closed"
+
+    def snapshot(self) -> list[dict]:
+        """Per-key breaker state for reports — quarantined plans are
+        the entries with ``state != "closed"``."""
+        with self._lock:
+            return [{"key": k, "state": r["state"], "fails": r["fails"],
+                     "opens": r["opens"], "label": r["label"]}
+                    for k, r in self._keys.items()]
+
+
+def _all_finite(out) -> bool:
+    if isinstance(out, tuple):
+        return all(_all_finite(o) for o in out)
+    return bool(np.isfinite(np.asarray(out)).all())
+
+
+# --------------------------------------------------------------------------
 # entries & tickets
 # --------------------------------------------------------------------------
 
@@ -313,12 +451,24 @@ class _PlanEntry:
     digest: str
     pad_safe: bool
     batched_fn: Optional[object] = field(default=None, repr=False)
+    #: build-ladder outcome: "batched" | "exact" | "per_op"
+    build_tier: str = "batched"
+    per_op_fn: Optional[Compiled] = field(default=None, repr=False)
 
     @property
     def bucket_key(self) -> tuple:
         # unbatchable entries never co-batch: bucket by identity
         return ("plan", self.digest, tuple(sorted(self.class_shapes.items()))) \
             if self.batchable else ("entry", id(self))
+
+    def per_op(self) -> Compiled:
+        """The bottom ladder tier: per-operator interpreted dispatch
+        (``staged=False``) — no whole-plan jit involved.  Built lazily
+        on first degradation; a racing duplicate build is benign (the
+        operator-level plan cache is shared)."""
+        if self.per_op_fn is None:
+            self.per_op_fn = self.planned.compile(staged=False)
+        return self.per_op_fn
 
 
 @dataclass
@@ -331,6 +481,8 @@ class _Ticket:
     vector_world: bool
     future: Future
     t_submit: float
+    deadline: Optional[float] = None   # absolute perf_counter, or None
+    budget: int = 8                    # remaining re-execution charges
 
 
 # --------------------------------------------------------------------------
@@ -365,22 +517,59 @@ class FusionServer:
         Optional resize of the two global LRU plan caches — the
         lifecycle knob for long-lived processes churning through many
         plan structures.
+    max_queue
+        Bound on the admission queue (0: unbounded).  A full queue
+        rejects at ``submit`` with :class:`QueueFullError` — typed
+        backpressure instead of unbounded memory growth.
+    default_deadline_s
+        Deadline applied to every request that does not pass its own
+        ``deadline_s`` to ``submit`` (None: no deadline).  Expired
+        requests resolve with :class:`DeadlineExceededError` at dequeue
+        and at every degradation step; an execution already in flight
+        runs to completion.
+    retry_budget
+        Re-execution charges per request: each bisection half-dispatch
+        and each ladder tier costs one.  Exhaustion resolves the future
+        with :class:`RequestFailedError` (cause chained).
+    check_finite
+        Verify every tier's outputs are finite; NaN/Inf results degrade
+        down the ladder and, if reproduced at the bottom, fail with
+        :class:`NonFiniteOutputError`.  Off by default (host-side
+        ``isfinite`` scan per output).
+    breaker_threshold / breaker_cooldown_s
+        Circuit-breaker tuning: consecutive tier-0 failures before a
+        plan digest is quarantined, and how long before a half-open
+        probe is admitted.  ``server.breaker.snapshot()`` lists
+        quarantined plans; so does ``metrics.report(server)``.
     """
 
     def __init__(self, *, workers: int = 2, max_batch: int = 16,
                  pad_to: int = 64, context: Optional[FusionContext] = None,
                  plan_cache_capacity: Optional[int] = None,
                  whole_plan_cache_capacity: Optional[int] = None,
-                 autostart: bool = True):
+                 autostart: bool = True,
+                 max_queue: int = 0,
+                 default_deadline_s: Optional[float] = None,
+                 retry_budget: int = 8,
+                 check_finite: bool = False,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 30.0):
         self.workers = int(workers)
         self.max_batch = max(1, int(max_batch))
         self.pad_to = max(0, int(pad_to))
+        self.max_queue = max(0, int(max_queue))
+        self.default_deadline_s = default_deadline_s
+        self.retry_budget = max(0, int(retry_budget))
+        self.check_finite = bool(check_finite)
         self._ctx = context if context is not None else current_context()
         if plan_cache_capacity is not None:
             PLAN_CACHE.resize(plan_cache_capacity)
         if whole_plan_cache_capacity is not None:
             WHOLE_PLAN_CACHE.resize(whole_plan_cache_capacity)
         self.metrics = ServerMetrics()
+        self.breaker = CircuitBreaker(threshold=breaker_threshold,
+                                      cooldown_s=breaker_cooldown_s,
+                                      metrics=self.metrics)
         self._queue: "deque[_Ticket]" = deque()
         self._cv = threading.Condition()
         self._stop = False
@@ -406,14 +595,33 @@ class FusionServer:
             self._threads.append(t)
 
     def close(self, timeout: float = 10.0) -> None:
-        """Drain the queue, stop the workers, reject new submissions."""
+        """Stop the workers, reject new submissions, and resolve every
+        still-queued ticket with :class:`ServerClosedError` — a
+        submitted request's future never stays pending forever."""
         with self._cv:
             self._closed = True
             self._stop = True
             self._cv.notify_all()
-        for t in self._threads:
-            t.join(timeout=timeout)
-        self._threads = []
+        # a crashing worker may respawn a replacement concurrently with
+        # close(); join until the thread list stops changing
+        for _ in range(4):
+            with self._cv:
+                threads = list(self._threads)
+            if not threads:
+                break
+            for t in threads:
+                t.join(timeout=timeout)
+            with self._cv:
+                self._threads = [t for t in self._threads if t.is_alive()]
+                if not self._threads:
+                    break
+        with self._cv:
+            leftover, self._queue = list(self._queue), deque()
+        for t in leftover:
+            if not t.future.done():
+                t.future.set_exception(ServerClosedError(
+                    "FusionServer closed while the request was queued"))
+                self.metrics.on_cancel()
 
     def __enter__(self) -> "FusionServer":
         return self
@@ -422,7 +630,8 @@ class FusionServer:
         self.close()
 
     # -- admission -----------------------------------------------------------
-    def submit(self, region, *args, **kwargs) -> Future:
+    def submit(self, region, *args, deadline_s: Optional[float] = None,
+               retries: Optional[int] = None, **kwargs) -> Future:
         """Enqueue one invocation of ``region`` (a ``fused`` wrapper) on
         the given operands; returns a :class:`concurrent.futures.Future`
         resolving to the same values and shapes ``region(*args,
@@ -432,7 +641,12 @@ class FusionServer:
         request's slice as a device array would cost one dispatch per
         request, which is exactly the overhead batching exists to
         amortize.  Typed :class:`FusionServeError`\\ s are raised *here*
-        — a request that cannot be served is never enqueued."""
+        — a request that cannot be served is never enqueued.
+
+        ``deadline_s`` / ``retries`` override the server's
+        ``default_deadline_s`` / ``retry_budget`` per request (they are
+        control parameters, not operands — a region operand with either
+        name must be passed positionally)."""
         if self._closed:
             self.metrics.on_reject()
             raise ServerClosedError("submit on a closed FusionServer")
@@ -453,7 +667,7 @@ class FusionServer:
             self.metrics.on_reject()
             missing = set(names) - set(bound)
             extra = set(bound) - set(names)
-            raise FusionServeError(
+            raise AdmissionError(
                 f"operands do not match region signature {names}: "
                 f"missing {sorted(missing)}, unexpected {sorted(extra)}")
         try:
@@ -462,19 +676,49 @@ class FusionServer:
                                for n, v in bound.items())
         except TypeError as e:          # FusionInputError subclasses this
             self.metrics.on_reject()
-            raise FusionServeError(str(e)) from e
+            raise AdmissionError(str(e)) from e
+        if self.max_queue and len(self._queue) >= self.max_queue:
+            # early check outside the lock keeps the breaker's probe
+            # accounting clean; the authoritative check is at enqueue
+            self.metrics.on_reject("backpressure")
+            raise QueueFullError(
+                f"admission queue is full ({self.max_queue} requests); "
+                "shed load or retry with backoff")
         entry, m, was_padded = self._route(region, bound, shapes)
-        if entry.batchable:
+        allowed, state = self.breaker.allow(entry.digest)
+        if not allowed:
+            self.metrics.on_reject("quarantined")
+            raise PlanQuarantinedError(
+                f"plan {entry.digest} ({entry.label}) is quarantined by "
+                f"the circuit breaker (state={state}); retry after the "
+                f"cooldown ({self.breaker.cooldown_s}s)")
+        deadline = deadline_s if deadline_s is not None \
+            else self.default_deadline_s
+        budget = retries if retries is not None else self.retry_budget
+        if entry.batchable or entry.padded_names:
             # materialize host copies here, in the client's thread —
-            # worker time is the serving bottleneck, submit time is not
+            # worker time is the serving bottleneck, submit time is not.
+            # padded-class entries need them even when unbatchable (a
+            # degraded build serves the class per-request at class
+            # shapes: same zero-fill marshalling, batch of one)
             pos = [np.asarray(_canon_value(n, bound[n]), np.float32)
                    for n in entry.call_order]
         else:
             pos = []
+        now = time.perf_counter()
         ticket = _Ticket(entry=entry, pos=pos, kw=bound, m=m,
                          padded=was_padded, vector_world=vector_world,
-                         future=Future(), t_submit=time.perf_counter())
+                         future=Future(), t_submit=now,
+                         deadline=None if deadline is None
+                         else now + float(deadline),
+                         budget=max(0, int(budget)))
         with self._cv:
+            if self.max_queue and len(self._queue) >= self.max_queue:
+                self.breaker.cancel_probe(entry.digest)
+                self.metrics.on_reject("backpressure")
+                raise QueueFullError(
+                    f"admission queue is full ({self.max_queue} "
+                    "requests); shed load or retry with backoff")
             self._queue.append(ticket)
             depth = len(self._queue)
             self._cv.notify()
@@ -537,6 +781,20 @@ class FusionServer:
         hit = self._entries.get(ekey)
         if hit is not None:
             return hit
+        name = getattr(region.fn, "__name__", "<expr>")
+        dims = "/".join(f"{r}x{c}" for r, c in
+                        (class_shapes[n] for n in region.names))
+        label = f"{name}[{dims}]"
+        # build circuit breaker: a compile failure that recurs on every
+        # retry must not cost a full rebuild per submit
+        bkey = "build:" + WholePlanCache.key_digest(ekey)
+        allowed, state = self.breaker.allow(bkey)
+        if not allowed:
+            self.metrics.on_reject("quarantined")
+            raise PlanQuarantinedError(
+                f"plan compile for {label} is quarantined after repeated "
+                f"build failures (state={state}); retry after the "
+                f"cooldown ({self.breaker.cooldown_s}s)")
         t0 = time.perf_counter()
         operands = {}
         for n in region.names:
@@ -546,27 +804,65 @@ class FusionServer:
             else:
                 operands[n] = jax.ShapeDtypeStruct(class_shapes[n],
                                                    jnp.float32)
-        traced = region.trace(**operands)
-        planned = traced.plan(context=self._ctx)
-        compiled = planned.compile()
+        try:
+            traced = region.trace(**operands)
+            planned = traced.plan(context=self._ctx)
+        except Exception as e:
+            self.breaker.record_failure(bkey, label=label)
+            raise PlanCompileError(
+                f"trace/plan failed for {label}: {e}") from e
         if padded_names:
             report = pad_safety(traced.graph, padded_names)
             assert report.safe, "pad-checked class re-verified unsafe"
             out_axes = report.out_axes
         else:
             out_axes = tuple(None for _ in traced.graph.outputs)
+        # build ladder: batched whole-plan → exact-shape staged → per-op
+        # (staged=False).  Each degradation is recorded in the runtime-
+        # fallback ledger; total build failure opens the build breaker.
+        compiled = batched_fn = None
+        build_tier = "batched" if batchable else "exact"
+        if batchable:
+            try:
+                compiled = planned.compile()
+                batched_fn = compiled.batched()
+            except Exception as e:           # noqa: BLE001 — degrade
+                self.metrics.on_runtime_fallback(
+                    "plan.jit_build",
+                    f"batched whole-plan build failed for {label} "
+                    f"({type(e).__name__}: {e}); serving exact-shape "
+                    "per-request", tier="exact")
+                compiled, batchable, build_tier = None, False, "exact"
+        if compiled is None:
+            try:
+                compiled = planned.compile()
+            except Exception as e:           # noqa: BLE001 — degrade
+                self.metrics.on_runtime_fallback(
+                    "plan.jit_build",
+                    f"staged compile failed for {label} "
+                    f"({type(e).__name__}: {e}); serving per-op "
+                    "staged=False", tier="per_op")
+                try:
+                    compiled = planned.compile(staged=False)
+                    build_tier = "per_op"
+                except Exception as e2:
+                    self.breaker.record_failure(bkey, label=label)
+                    raise PlanCompileError(
+                        f"no executable exists for {label} on any ladder "
+                        f"tier: {e2}") from e2
+        self.breaker.record_success(bkey)
         digest = WholePlanCache.key_digest(compiled.plan_key())
-        name = getattr(region.fn, "__name__", "<expr>")
-        dims = "/".join(f"{r}x{c}" for r, c in
-                        (class_shapes[n] for n in region.names))
         entry = _PlanEntry(
-            label=f"{name}[{dims}]", compiled=compiled, planned=planned,
+            label=label, compiled=compiled, planned=planned,
             call_order=compiled.input_order, class_shapes=class_shapes,
             padded_names=padded_names, out_axes=out_axes,
             n_outputs=len(traced.graph.outputs), batchable=batchable,
-            digest=digest, pad_safe=not pad_fallback)
+            digest=digest, pad_safe=not pad_fallback,
+            build_tier=build_tier)
+        if build_tier == "per_op":
+            entry.per_op_fn = compiled
         if batchable:
-            entry.batched_fn = compiled.batched()
+            entry.batched_fn = batched_fn
         self._entries[ekey] = entry
         self.metrics.on_compile(digest, time.perf_counter() - t0,
                                 pad_fallback=pad_fallback)
@@ -627,51 +923,258 @@ class FusionServer:
 
     # -- worker --------------------------------------------------------------
     def _worker_loop(self) -> None:
-        while True:
-            with self._cv:
-                while not self._queue and not self._stop:
-                    self._cv.wait(timeout=0.1)
-                if not self._queue:
-                    if self._stop:
-                        return
-                    continue
-                head = self._queue.popleft()
-                batch = [head]
-                if self.max_batch > 1:
-                    rest: "deque[_Ticket]" = deque()
-                    bk = head.entry.bucket_key
-                    while self._queue:
-                        t = self._queue.popleft()
-                        if len(batch) < self.max_batch and \
-                                t.entry.bucket_key == bk:
-                            batch.append(t)
-                        else:
-                            rest.append(t)
-                    self._queue.extend(rest)
-                depth = len(self._queue)
-            self._execute(batch, depth)
-
-    def _execute(self, batch: list[_Ticket], depth: int) -> None:
-        entry = batch[0].entry
+        batch: list[_Ticket] = []
         try:
-            if entry.batchable:
-                per = self._run_batched(entry, batch)
-            else:
-                per = [self._run_single(t) for t in batch]
-            now = time.perf_counter()
-            lats = []
-            for t, outs in zip(batch, per):
-                t.future.set_result(outs)
-                lats.append((now - t.t_submit) * 1e6)
-            self.metrics.on_batch(
-                entry.digest, len(batch),
-                sum(1 for t in batch if t.padded), lats, depth)
-        except Exception as e:            # noqa: BLE001 - resolve futures
-            for t in batch:
-                if not t.future.done():
-                    t.future.set_exception(e)
-            self.metrics.on_batch(entry.digest, len(batch), 0, [], depth,
-                                  failed=True)
+            while True:
+                with self._cv:
+                    while not self._queue and not self._stop:
+                        self._cv.wait(timeout=0.1)
+                    if not self._queue:
+                        if self._stop:
+                            return
+                        continue
+                    head = self._queue.popleft()
+                    batch = [head]
+                    if self.max_batch > 1:
+                        rest: "deque[_Ticket]" = deque()
+                        bk = head.entry.bucket_key
+                        while self._queue:
+                            t = self._queue.popleft()
+                            if len(batch) < self.max_batch and \
+                                    t.entry.bucket_key == bk:
+                                batch.append(t)
+                            else:
+                                rest.append(t)
+                        self._queue.extend(rest)
+                    depth = len(self._queue)
+                faults.fault_point("serve.worker")
+                self._execute(batch, depth)
+                batch = []
+        except BaseException as e:        # noqa: BLE001 — crash: respawn
+            self._on_worker_crash(batch, e)
+
+    def _on_worker_crash(self, inflight: list[_Ticket], err) -> None:
+        """Crash containment: requeue the dead worker's unresolved
+        tickets at the queue front and spawn a replacement thread — the
+        pool never shrinks silently."""
+        self.metrics.on_worker_crash(type(err).__name__)
+        me = threading.current_thread()
+        replacement = None
+        with self._cv:
+            pending = [t for t in inflight if not t.future.done()]
+            self._queue.extendleft(reversed(pending))
+            if pending:
+                self.metrics.on_requeue(len(pending))
+            try:
+                self._threads.remove(me)
+            except ValueError:
+                pass
+            if not self._stop:
+                replacement = threading.Thread(
+                    target=self._worker_loop, name=me.name, daemon=True)
+                self._threads.append(replacement)
+                self.metrics.on_worker_respawn()
+            self._cv.notify_all()
+        if replacement is not None:
+            replacement.start()
+
+    # -- execution: tier-0 dispatch, bisection, degradation ladder -----------
+    def _execute(self, batch: list[_Ticket], depth: int) -> None:
+        batch = [t for t in batch if not self._expire(t)]
+        if not batch:
+            return
+        entry = batch[0].entry
+        if entry.batchable:
+            self._dispatch(entry, batch, depth)
+        else:
+            for t in batch:              # isolation: one future per try
+                self._single(t, depth)
+
+    def _expire(self, t: _Ticket) -> bool:
+        """Deadline check at dequeue and at every ladder step."""
+        if t.future.done():
+            return True
+        if t.deadline is not None and time.perf_counter() > t.deadline:
+            t.future.set_exception(DeadlineExceededError(
+                f"deadline passed before {t.entry.label} finished"))
+            self.metrics.on_deadline(t.entry.digest)
+            return True
+        return False
+
+    def _charge(self, t: _Ticket, cause: Exception) -> bool:
+        """Spend one re-execution charge; False (and a terminal typed
+        error on the future) when the budget is exhausted."""
+        if t.future.done():
+            return False
+        if t.budget <= 0:
+            err = RequestFailedError(
+                f"retry budget exhausted for {t.entry.label}: "
+                f"{type(cause).__name__}: {cause}")
+            err.__cause__ = cause
+            t.future.set_exception(err)
+            self.metrics.on_retries_exhausted(t.entry.digest)
+            self.metrics.on_result(t.entry.digest, None, failed=True)
+            return False
+        t.budget -= 1
+        return True
+
+    def _dispatch(self, entry: _PlanEntry, batch: list[_Ticket],
+                  depth: int) -> None:
+        """Tier 0: one batched vmapped dispatch.  Failure bisects the
+        batch (poison-request isolation: a bad operand fails only its
+        own future) and sends singletons down the degradation ladder."""
+        try:
+            rule = faults.fault_point("serve.batch_dispatch")
+            per = self._run_batched(entry, batch)
+            if rule is not None:         # injected nonfinite: poison
+                per = [faults.poison(p) for p in per]
+        except Exception as e:            # noqa: BLE001 — ladder
+            self.metrics.on_dispatch(entry.digest, len(batch), 0, depth,
+                                     failed=True)
+            self.breaker.record_failure(entry.digest, label=entry.label)
+            if len(batch) == 1:
+                t = batch[0]
+                if not self._expire(t) and self._charge(t, e):
+                    self._degrade(t, e, depth)
+                return
+            self.metrics.on_bisect()
+            self.metrics.on_runtime_fallback(
+                "serve.batch_dispatch",
+                f"batched dispatch of {len(batch)} requests failed "
+                f"({type(e).__name__}); bisecting to isolate the poison "
+                "request", tier="bisect")
+            mid = len(batch) // 2
+            for half in (batch[:mid], batch[mid:]):
+                half = [t for t in half
+                        if not self._expire(t) and self._charge(t, e)]
+                if half:
+                    self._dispatch(entry, half, depth)
+            return
+        self.breaker.record_success(entry.digest)
+        now = time.perf_counter()
+        self.metrics.on_dispatch(entry.digest, len(batch),
+                                 sum(1 for t in batch if t.padded), depth)
+        for t, outs in zip(batch, per):
+            if t.future.done():
+                continue
+            if self.check_finite and not _all_finite(outs):
+                err = NonFiniteOutputError(
+                    f"batched result for {t.entry.label} is non-finite")
+                self.metrics.on_nonfinite(entry.digest)
+                if self._charge(t, err):
+                    self._degrade(t, err, depth)
+                continue
+            t.future.set_result(outs)
+            self.metrics.on_result(entry.digest,
+                                   (now - t.t_submit) * 1e6)
+
+    def _single(self, t: _Ticket, depth: int) -> None:
+        """Unbatchable (sparse / layout / degraded-build) path: tier 0
+        is the exact-shape staged call; failures continue at per-op."""
+        if self._expire(t):
+            return
+        try:
+            faults.fault_point("serve.batch_dispatch")
+            out = self._run_tier(t, t.entry.compiled)
+            if self.check_finite and not _all_finite(out):
+                self.metrics.on_nonfinite(t.entry.digest)
+                raise NonFiniteOutputError(
+                    f"result for {t.entry.label} is non-finite")
+        except Exception as e:            # noqa: BLE001 — ladder
+            self.metrics.on_dispatch(t.entry.digest, 1, 0, depth,
+                                     failed=True)
+            self.breaker.record_failure(t.entry.digest,
+                                        label=t.entry.label)
+            if self._charge(t, e):
+                self._degrade(t, e, depth, tiers=("per_op",))
+            return
+        self.breaker.record_success(t.entry.digest)
+        self.metrics.on_dispatch(t.entry.digest, 1, 0, depth)
+        t.future.set_result(out)
+        self.metrics.on_result(t.entry.digest,
+                               (time.perf_counter() - t.t_submit) * 1e6)
+
+    def _degrade(self, t: _Ticket, cause: Exception, depth: int,
+                 tiers: tuple = ("exact", "per_op")) -> None:
+        """Walk the remaining ladder tiers for one request.  Every
+        degradation is recorded in the runtime-fallback ledger — the
+        run-time extension of ``record_fallback`` — and charged against
+        the retry budget.  The bottom of the ladder is a typed terminal
+        error chaining the original cause."""
+        entry = t.entry
+        for i, tier in enumerate(tiers):
+            if self._expire(t):
+                return
+            if i > 0 and not self._charge(t, cause):
+                return
+            try:
+                if tier == "exact":
+                    out = self._run_tier(t, entry.compiled)
+                else:
+                    out = self._run_tier(t, entry.per_op())
+                if self.check_finite and not _all_finite(out):
+                    self.metrics.on_nonfinite(entry.digest)
+                    raise NonFiniteOutputError(
+                        f"{tier} result for {entry.label} is non-finite")
+            except Exception as e:        # noqa: BLE001 — next tier
+                cause = e
+                continue
+            self.metrics.on_degrade(tier, entry.digest)
+            self.metrics.on_runtime_fallback(
+                "serve.batch_dispatch",
+                f"request re-executed at tier '{tier}' after "
+                f"{type(cause).__name__}", tier=tier)
+            t.future.set_result(out)
+            self.metrics.on_result(entry.digest,
+                                   (time.perf_counter() - t.t_submit) * 1e6)
+            return
+        if t.future.done():
+            return
+        if isinstance(cause, NonFiniteOutputError):
+            t.future.set_exception(cause)
+        else:
+            err = RequestFailedError(
+                f"every degradation tier failed for {entry.label}: "
+                f"{type(cause).__name__}: {cause}")
+            err.__cause__ = cause
+            t.future.set_exception(err)
+        self.metrics.on_result(entry.digest, None, failed=True)
+
+    def _run_tier(self, t: _Ticket, fn):
+        """Run one request through ``fn`` — a Compiled at the entry's
+        class shapes (staged exact tier or per-op tier).  Padded-class
+        tickets marshal exactly like one row of the batched path:
+        zero-fill up to class shapes (the pad-safety analysis already
+        proved that exact) and slice the outputs back.  Exact-shape
+        tickets pass their operands straight through — the Compiled
+        call handles canonicalization and the 1-D/0-D round trip."""
+        entry = t.entry
+        if not t.pos:
+            out = fn(**t.kw)
+            if isinstance(out, tuple):
+                return tuple(np.asarray(o) for o in out)
+            return np.asarray(out)
+        kwargs = {}
+        for i, name in enumerate(entry.call_order):
+            r, c = entry.class_shapes[name]
+            v = t.pos[i]
+            if v.shape != (r, c):
+                buf = np.zeros((r, c), np.float32)
+                buf[:v.shape[0], :v.shape[1]] = v
+                v = buf
+            kwargs[name] = v
+        out = fn(**kwargs)
+        outs = out if isinstance(out, tuple) else (out,)
+        vals = []
+        for k, o in enumerate(outs):
+            v = np.asarray(o)
+            ax = entry.out_axes[k]
+            if ax == 0 and t.m and v.ndim >= 1 and v.shape[0] != t.m:
+                v = v[:t.m]
+            elif ax == 1 and t.m and v.ndim >= 2 and v.shape[1] != t.m:
+                v = v[:, :t.m]
+            vals.append(_uncanon_np(v) if t.vector_world else v)
+        return vals[0] if len(vals) == 1 else tuple(vals)
 
     def _run_batched(self, entry: _PlanEntry,
                      batch: list[_Ticket]) -> list:
@@ -713,13 +1216,3 @@ class FusionServer:
                 vals.append(_uncanon_np(v) if t.vector_world else v)
             per.append(vals[0] if len(vals) == 1 else tuple(vals))
         return per
-
-    @staticmethod
-    def _run_single(t: _Ticket):
-        # unbatchable (sparse / layout) path: the Compiled call handles
-        # canonicalization, layout constraints, and the round-trip
-        # itself; results land on the host like the batched path's
-        out = t.entry.compiled(**t.kw)
-        if isinstance(out, tuple):
-            return tuple(np.asarray(o) for o in out)
-        return np.asarray(out)

@@ -1,5 +1,5 @@
 """Serving metrics: latency percentiles, queue depth, batch occupancy,
-and plan-cache snapshots for the fused-plan server.
+resilience counters, and plan-cache snapshots for the fused-plan server.
 
 Everything here is plain-python and thread-safe: worker threads record
 per-request latencies and per-batch occupancy into bounded reservoirs
@@ -12,24 +12,40 @@ derives its serving rows from.
 Glossary (the keys ``snapshot()`` exports):
 
 ``requests``
-    ``submitted`` / ``completed`` / ``failed`` (worker raised; the
-    error is also set on the request future) / ``rejected`` (typed
-    admission error at ``submit`` time — never enqueued).
+    ``submitted`` / ``completed`` / ``failed`` (resolved with a typed
+    execution error) / ``rejected`` (typed admission error at
+    ``submit`` time — never enqueued) / ``deadline_exceeded`` /
+    ``cancelled`` (still queued at ``close()``).
 ``latency_us``
     Submit-to-result wall latency percentiles (``p50``/``p95``/``p99``),
     mean, and the reservoir count they were computed over.
 ``batches``
-    ``count`` (batched dispatches), ``batched_requests`` (requests that
-    shared a dispatch with at least one other), ``padded_requests``
-    (requests zero-padded up to their shape class), ``occupancy_mean`` /
-    ``occupancy_max`` (requests per batch), ``pad_fallbacks`` (buckets
-    that degraded to exact-shape batching because padding was proven
-    unsafe for the plan's outputs).
+    ``count`` (dispatches), ``batched_requests`` (requests that shared
+    a dispatch with at least one other), ``padded_requests`` (requests
+    zero-padded up to their shape class), ``occupancy_mean`` /
+    ``occupancy_max`` (requests per dispatch), ``pad_fallbacks``
+    (buckets that degraded to exact-shape batching because padding was
+    proven unsafe for the plan's outputs), ``failed_dispatches``
+    (tier-0 dispatches that raised — their requests then walk the
+    degradation ladder, so a failed dispatch is *not* a failed
+    request).
 ``queue``
     Current depth and the high-water mark.
 ``buckets``
     Per-bucket counters keyed by the structural plan digest: requests,
     batches, compiles and compile seconds.
+``resilience``
+    The self-healing ledger: ``rejected`` by reason (``backpressure`` /
+    ``quarantined``), ``degraded`` requests per ladder tier (``exact``
+    / ``per_op``), ``bisections``, ``nonfinite_detected``,
+    ``retries_exhausted``, ``workers`` (``crashes`` / ``respawns`` /
+    ``requeued_requests``), and ``breaker`` transition counts
+    (``opens`` / ``probes`` / ``closes``).
+``runtime_fallbacks``
+    Bounded ledger of explicit run-time degradations — the run-time
+    extension of the plan-time ``record_fallback`` discipline: one
+    ``{site, tier, reason, count}`` row per distinct downgrade, so no
+    degradation is silent.
 ``cache``
     :func:`repro.core.plan_cache_stats` and
     :func:`repro.core.whole_plan_cache_stats` snapshots (hit/miss/
@@ -50,6 +66,8 @@ import numpy as np
 RESERVOIR_SIZE = 8192
 #: per-bucket counter records kept (LRU past this; drops are counted)
 BUCKET_STATS_CAPACITY = 1024
+#: distinct runtime-fallback rows kept (LRU past this)
+FALLBACK_LEDGER_CAPACITY = 256
 
 
 def percentiles(values: Iterable[float],
@@ -99,6 +117,7 @@ class ServerMetrics:
         self.batched_requests = 0
         self.padded_requests = 0
         self.pad_fallbacks = 0
+        self.failed_dispatches = 0
         self.compiles = 0
         self.compile_time_s = 0.0
         self.queue_depth = 0
@@ -107,6 +126,20 @@ class ServerMetrics:
         self.occupancy = Reservoir()
         self._buckets: "OrderedDict[str, dict]" = OrderedDict()
         self.dropped_buckets = 0
+        # resilience ledger
+        self.deadline_exceeded = 0
+        self.cancelled = 0
+        self.rejected_by_reason: dict[str, int] = {}
+        self.degraded: dict[str, int] = {}
+        self.bisections = 0
+        self.nonfinite_detected = 0
+        self.retries_exhausted = 0
+        self.worker_crashes = 0
+        self.worker_respawns = 0
+        self.requeued_requests = 0
+        self.breaker_events: dict[str, int] = {}
+        self._fallbacks: "OrderedDict[tuple, dict]" = OrderedDict()
+        self.dropped_fallbacks = 0
 
     # -- recording (called by the server) ------------------------------------
     def on_submit(self, depth: int) -> None:
@@ -115,9 +148,11 @@ class ServerMetrics:
             self.queue_depth = depth
             self.peak_queue_depth = max(self.peak_queue_depth, depth)
 
-    def on_reject(self) -> None:
+    def on_reject(self, reason: str = "admission") -> None:
         with self._lock:
             self.rejected += 1
+            self.rejected_by_reason[reason] = \
+                self.rejected_by_reason.get(reason, 0) + 1
 
     def on_compile(self, bucket: str, seconds: float,
                    pad_fallback: bool = False) -> None:
@@ -130,9 +165,11 @@ class ServerMetrics:
             rec["compiles"] += 1
             rec["compile_time_s"] += seconds
 
-    def on_batch(self, bucket: str, size: int, padded: int,
-                 latencies_us: list[float], depth: int,
-                 failed: bool = False) -> None:
+    def on_dispatch(self, bucket: str, size: int, padded: int,
+                    depth: int, failed: bool = False) -> None:
+        """One tier-0 dispatch (batched or single).  ``failed`` counts
+        the *dispatch*; its requests are accounted when their futures
+        resolve (``on_result``)."""
         with self._lock:
             self.batches += 1
             self.occupancy.add(size)
@@ -141,14 +178,81 @@ class ServerMetrics:
                 self.batched_requests += size
             self.padded_requests += padded
             if failed:
-                self.failed += size
-            else:
-                self.completed += size
-                for lat in latencies_us:
-                    self.latency_us.add(lat)
+                self.failed_dispatches += 1
             rec = self._bucket(bucket)
             rec["requests"] += size
             rec["batches"] += 1
+
+    def on_result(self, bucket: str, latency_us: Optional[float],
+                  failed: bool = False) -> None:
+        """One request future resolved (result or typed error)."""
+        with self._lock:
+            if failed:
+                self.failed += 1
+            else:
+                self.completed += 1
+                if latency_us is not None:
+                    self.latency_us.add(latency_us)
+
+    def on_deadline(self, bucket: str = "") -> None:
+        with self._lock:
+            self.deadline_exceeded += 1
+
+    def on_cancel(self) -> None:
+        with self._lock:
+            self.cancelled += 1
+
+    def on_bisect(self) -> None:
+        with self._lock:
+            self.bisections += 1
+
+    def on_nonfinite(self, bucket: str = "") -> None:
+        with self._lock:
+            self.nonfinite_detected += 1
+
+    def on_degrade(self, tier: str, bucket: str = "") -> None:
+        with self._lock:
+            self.degraded[tier] = self.degraded.get(tier, 0) + 1
+
+    def on_retries_exhausted(self, bucket: str = "") -> None:
+        with self._lock:
+            self.retries_exhausted += 1
+
+    def on_worker_crash(self, kind: str = "") -> None:
+        with self._lock:
+            self.worker_crashes += 1
+
+    def on_worker_respawn(self) -> None:
+        with self._lock:
+            self.worker_respawns += 1
+
+    def on_requeue(self, n: int) -> None:
+        with self._lock:
+            self.requeued_requests += n
+
+    def on_breaker(self, event: str) -> None:
+        with self._lock:
+            self.breaker_events[event] = \
+                self.breaker_events.get(event, 0) + 1
+
+    def on_runtime_fallback(self, site: str, reason: str,
+                            tier: str = "") -> None:
+        """Record one explicit run-time degradation — the serving-side
+        mirror of ``CompiledPlan.record_fallback`` (EXE005: no silent
+        fallbacks, at plan time or run time)."""
+        with self._lock:
+            key = (site, tier, reason)
+            rec = self._fallbacks.get(key)
+            if rec is None:
+                rec = {"site": site, "tier": tier, "reason": reason,
+                       "count": 0}
+                self._fallbacks[key] = rec
+                while len(self._fallbacks) > FALLBACK_LEDGER_CAPACITY:
+                    self._fallbacks.popitem(last=False)
+                    self.dropped_fallbacks += 1
+            else:
+                self._fallbacks.move_to_end(key)
+            rec["count"] += 1
 
     def _bucket(self, key: str) -> dict:
         rec = self._buckets.get(key)
@@ -175,6 +279,8 @@ class ServerMetrics:
                     "completed": self.completed,
                     "failed": self.failed,
                     "rejected": self.rejected,
+                    "deadline_exceeded": self.deadline_exceeded,
+                    "cancelled": self.cancelled,
                 },
                 "latency_us": self.latency_us.summary(),
                 "batches": {
@@ -184,6 +290,7 @@ class ServerMetrics:
                     "occupancy_mean": occ["mean"],
                     "occupancy_max": occ["max"],
                     "pad_fallbacks": self.pad_fallbacks,
+                    "failed_dispatches": self.failed_dispatches,
                 },
                 "queue": {
                     "depth": self.queue_depth,
@@ -193,6 +300,22 @@ class ServerMetrics:
                     "count": self.compiles,
                     "time_s": round(self.compile_time_s, 6),
                 },
+                "resilience": {
+                    "rejected": dict(self.rejected_by_reason),
+                    "degraded": dict(self.degraded),
+                    "bisections": self.bisections,
+                    "nonfinite_detected": self.nonfinite_detected,
+                    "retries_exhausted": self.retries_exhausted,
+                    "workers": {
+                        "crashes": self.worker_crashes,
+                        "respawns": self.worker_respawns,
+                        "requeued_requests": self.requeued_requests,
+                    },
+                    "breaker": dict(self.breaker_events),
+                },
+                "runtime_fallbacks": [dict(r)
+                                      for r in self._fallbacks.values()],
+                "dropped_fallbacks": self.dropped_fallbacks,
                 "buckets": [dict(r) for r in self._buckets.values()],
                 "dropped_buckets": self.dropped_buckets,
             }
@@ -205,7 +328,8 @@ class ServerMetrics:
     def report(self, server: Optional[object] = None,
                top_keys: int = 8) -> dict:
         """``explain()``-style report: the snapshot plus the server's
-        configuration and the hottest whole-plan cache keys."""
+        configuration, quarantined plans, and the hottest whole-plan
+        cache keys."""
         from repro.core.codegen import WHOLE_PLAN_CACHE
         doc = {"serving": self.snapshot()}
         if server is not None:
@@ -213,8 +337,20 @@ class ServerMetrics:
                 "workers": getattr(server, "workers", None),
                 "max_batch": getattr(server, "max_batch", None),
                 "pad_to": getattr(server, "pad_to", None),
+                "max_queue": getattr(server, "max_queue", None),
+                "retry_budget": getattr(server, "retry_budget", None),
                 "entries": len(getattr(server, "_entries", ()) or ()),
             }
+            breaker = getattr(server, "breaker", None)
+            if breaker is not None:
+                keys = breaker.snapshot()
+                doc["server"]["breaker"] = {
+                    "threshold": breaker.threshold,
+                    "cooldown_s": breaker.cooldown_s,
+                    "keys": keys,
+                    "quarantined": [r for r in keys
+                                    if r["state"] != "closed"],
+                }
         doc["serving"]["cache"]["whole_plan_keys"] = \
             WHOLE_PLAN_CACHE.key_stats(top=top_keys)
         return doc

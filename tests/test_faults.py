@@ -1,0 +1,460 @@
+"""Chaos suite: seeded fault injection against the self-healing server.
+
+The invariant under every schedule: **no request is lost** — every
+submitted future resolves with either a result (1e-5 parity against
+direct execution) or a typed :class:`FusionServeError`; the worker pool
+recovers to full size; quarantined plans are reported.  Schedules are
+seeded and deterministic (`repro.faults`), so every scenario here is a
+reproducible test, not a flake generator.
+
+Fault-test regions use distinct literal constants on purpose: the
+whole-plan cache is process-global and keyed structurally, so a region
+structurally identical to another test's would hit the cache and skip
+the jit-build fault site entirely.
+
+``REPRO_CHAOS_CASES`` scales the randomized sweep (default 6 smoke
+cases; CI's full job runs 100).
+"""
+
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.core import fused, ir
+from repro.serve import (DeadlineExceededError, FusionServeError,
+                         FusionServer, NonFiniteOutputError,
+                         PlanQuarantinedError, QueueFullError,
+                         RequestFailedError, ServerClosedError)
+
+rng = np.random.default_rng(23)
+
+
+def _hinge(c=1.0):
+    # l2svm scoring term; the literal c makes the plan structurally
+    # unique per test (see module docstring)
+    return fused(lambda X, w, y: ir.relu(c - y * (X @ w)))
+
+
+def _probs():
+    def probs(X, W):
+        E = ir.exp(X @ W)
+        return E / E.rowsums()
+    return fused(probs)          # mlogreg class-probability region
+
+
+def _hinge_args(m, k=16):
+    X = rng.normal(size=(m, k)).astype(np.float32)
+    w = rng.normal(size=(k, 1)).astype(np.float32)
+    y = np.sign(rng.normal(size=(m, 1))).astype(np.float32)
+    return X, w, y
+
+
+def _parity(got, ref):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# the faults subsystem itself
+# --------------------------------------------------------------------------
+
+def test_registry_covers_the_stack():
+    sites = {s.name: s for s in faults.ensure_registered()}
+    for name in ("plan.jit_build", "kernels.pallas_call", "dist.segment",
+                 "serve.batch_dispatch", "serve.worker"):
+        assert name in sites, name
+        assert sites[name].handler.strip(), f"{name} has no handler"
+        assert sites[name].kinds
+
+
+def test_schedule_is_deterministic():
+    rules = [faults.FaultRule("s", kind="error", p=0.3, count=5),
+             faults.FaultRule("s", kind="latency", at=(2, 4))]
+
+    def run():
+        sched = faults.FaultSchedule(rules, seed=42)
+        fired = [sched.poke("s") is not None for _ in range(50)]
+        return fired, sched.events()
+
+    a, b = run(), run()
+    assert a == b                       # same seed → same fault sequence
+    assert any(a[0])                    # p=0.3 over 50 hits: fires
+    other = faults.FaultSchedule(rules, seed=43)
+    assert [other.poke("s") is not None for _ in range(50)] != a[0]
+
+
+def test_fault_point_kinds_and_uninstall():
+    assert faults.fault_point("anything") is None      # no schedule: free
+    sched = faults.FaultSchedule([
+        faults.FaultRule("a", kind="error", at=(0,), message="boom"),
+        faults.FaultRule("b", kind="crash", at=(0,)),
+        faults.FaultRule("c", kind="latency", at=(0,), delay_s=0.05),
+        faults.FaultRule("d", kind="nonfinite", at=(0,)),
+    ])
+    with faults.inject(sched):
+        with pytest.raises(faults.FaultInjected, match="boom"):
+            faults.fault_point("a")
+        with pytest.raises(faults.WorkerCrash):
+            faults.fault_point("b")
+        t0 = time.perf_counter()
+        assert faults.fault_point("c") is None         # slept, no raise
+        assert time.perf_counter() - t0 >= 0.04
+        rule = faults.fault_point("d")
+        assert rule is not None and rule.kind == "nonfinite"
+        assert faults.fault_point("d") is None         # at=(0,) only
+    assert faults.active() is None                     # uninstalled
+    assert sched.events() == [("a", "error", 0), ("b", "crash", 0),
+                              ("c", "latency", 0), ("d", "nonfinite", 0)]
+
+
+def test_poison_structure():
+    p = faults.poison((np.ones((2, 2), np.float32), np.float32(3.0)))
+    assert isinstance(p, tuple) and np.isnan(p[0]).all() and np.isnan(p[1])
+
+
+# --------------------------------------------------------------------------
+# fault sites outside the server
+# --------------------------------------------------------------------------
+
+def test_dist_segment_fault_degrades_to_fallback():
+    from repro.kernels.distributed import SegmentFallback, plan_segment
+    sched = faults.FaultSchedule([
+        faults.FaultRule("dist.segment", kind="error", at=(0,),
+                         message="mesh gone")])
+    with faults.inject(sched):
+        fb = plan_segment([], mesh=None)
+        assert isinstance(fb, SegmentFallback)
+        assert "injected fault" in fb.reason           # recorded, not raised
+        fb2 = plan_segment([], mesh=None)              # next hit: normal path
+        assert "injected" not in fb2.reason
+
+
+def test_pallas_call_fault_surfaces_and_recovers():
+    region = _hinge(1.0731)
+    X, w, y = _hinge_args(24)
+    planned = region.trace(X=X, w=w, y=y).plan()
+    sched = faults.FaultSchedule([
+        faults.FaultRule("kernels.pallas_call", kind="error", at=(0,))])
+    with faults.inject(sched):
+        compiled = planned.compile(pallas="interpret")
+        with pytest.raises(Exception):                 # build-time failure
+            compiled(X, w, y)
+    # the failed build was never cached: a clean retry succeeds
+    compiled2 = planned.compile(pallas="interpret")
+    _parity(compiled2(X, w, y), region(X, w, y))
+
+
+# --------------------------------------------------------------------------
+# server: build ladder, bisection, degradation, nonfinite
+# --------------------------------------------------------------------------
+
+def test_jit_build_fault_degrades_to_exact_shape_serving():
+    region = _hinge(1.0417)
+    X, w, y = _hinge_args(50)
+    server = FusionServer(workers=1, max_batch=4, pad_to=32)
+    try:
+        sched = faults.FaultSchedule([
+            faults.FaultRule("plan.jit_build", kind="error", at=(0,))])
+        with faults.inject(sched):
+            got = server.submit(region, X, w, y).result(timeout=300)
+        _parity(got, region(X, w, y))
+        assert sched.events(), "build fault never fired"
+        snap = server.metrics.snapshot()
+        sites = {r["site"] for r in snap["runtime_fallbacks"]}
+        assert "plan.jit_build" in sites               # explicit, counted
+        assert snap["requests"]["completed"] == 1
+        assert snap["requests"]["failed"] == 0
+    finally:
+        server.close()
+
+
+def test_batch_dispatch_error_bisects_and_isolates():
+    """One injected tier-0 failure on a 4-request batch must not fail
+    the co-batched requests wholesale (the pre-hardening behavior): the
+    batch bisects and every request still resolves with parity."""
+    region = _hinge(1.0523)
+    cases = [_hinge_args(m) for m in (20, 25, 31, 32)]
+    server = FusionServer(workers=1, max_batch=8, pad_to=32,
+                          autostart=False)
+    server._started = True              # enqueue deterministically
+    try:
+        futs = [server.submit(region, *args) for args in cases]
+        server._started = False
+        sched = faults.FaultSchedule([
+            faults.FaultRule("serve.batch_dispatch", kind="error",
+                             at=(0,))])
+        with faults.inject(sched):
+            server.start()
+            results = [f.result(timeout=300) for f in futs]
+        for args, got in zip(cases, results):
+            _parity(got, region(*args))
+        snap = server.metrics.snapshot()
+        assert snap["requests"]["completed"] == 4
+        assert snap["requests"]["failed"] == 0
+        assert snap["resilience"]["bisections"] >= 1
+        assert snap["batches"]["failed_dispatches"] >= 1
+    finally:
+        server.close()
+
+
+def test_nonfinite_injection_degrades_with_parity():
+    """check_finite=True: poisoned batched outputs are detected per
+    request, re-executed down the ladder, and the degraded results are
+    exact."""
+    region = _hinge(1.0611)
+    cases = [_hinge_args(m) for m in (20, 28)]
+    server = FusionServer(workers=1, max_batch=4, pad_to=32,
+                          check_finite=True, autostart=False)
+    server._started = True
+    try:
+        futs = [server.submit(region, *args) for args in cases]
+        server._started = False
+        sched = faults.FaultSchedule([
+            faults.FaultRule("serve.batch_dispatch", kind="nonfinite",
+                             at=(0,))])
+        with faults.inject(sched):
+            server.start()
+            results = [f.result(timeout=300) for f in futs]
+        for args, got in zip(cases, results):
+            _parity(got, region(*args))
+        snap = server.metrics.snapshot()
+        assert snap["resilience"]["nonfinite_detected"] >= 2
+        assert snap["resilience"]["degraded"].get("exact", 0) >= 2
+        assert snap["requests"]["failed"] == 0
+    finally:
+        server.close()
+
+
+def test_nan_operand_fails_only_its_own_future():
+    """A genuinely poisonous request (NaN operand) co-batched with
+    healthy ones: vmap rows are independent, so with check_finite the
+    poison request fails typed and the healthy ones stay exact."""
+    region = _hinge(1.0337)
+    good = [_hinge_args(m) for m in (20, 25, 31)]
+    Xbad, wbad, ybad = _hinge_args(24)
+    Xbad[3, 2] = np.nan
+    server = FusionServer(workers=1, max_batch=8, pad_to=32,
+                          check_finite=True, retry_budget=2,
+                          autostart=False)
+    server._started = True
+    try:
+        futs = [server.submit(region, *args) for args in good]
+        bad = server.submit(region, Xbad, wbad, ybad)
+        server._started = False
+        server.start()
+        for args, f in zip(good, futs):
+            _parity(f.result(timeout=300), region(*args))
+        with pytest.raises((NonFiniteOutputError, RequestFailedError)):
+            bad.result(timeout=300)
+        snap = server.metrics.snapshot()
+        assert snap["requests"]["completed"] == 3
+        assert snap["requests"]["failed"] == 1
+    finally:
+        server.close()
+
+
+# --------------------------------------------------------------------------
+# server: worker crash, deadlines, backpressure, close
+# --------------------------------------------------------------------------
+
+def test_worker_crash_requeues_and_respawns():
+    region = _hinge(1.0129)
+    cases = [_hinge_args(m) for m in (20, 25, 31, 32)]
+    server = FusionServer(workers=2, max_batch=4, pad_to=32,
+                          autostart=False)
+    server._started = True
+    try:
+        futs = [server.submit(region, *args) for args in cases]
+        server._started = False
+        sched = faults.FaultSchedule([
+            faults.FaultRule("serve.worker", kind="crash", at=(0,))])
+        with faults.inject(sched):
+            server.start()
+            for args, f in zip(cases, futs):
+                _parity(f.result(timeout=300), region(*args))
+        snap = server.metrics.snapshot()
+        assert snap["resilience"]["workers"]["crashes"] == 1
+        assert snap["resilience"]["workers"]["respawns"] == 1
+        assert snap["resilience"]["workers"]["requeued_requests"] >= 1
+        # no worker stays dead: the pool is back at full strength
+        alive = [t for t in server._threads if t.is_alive()]
+        assert len(alive) == server.workers
+    finally:
+        server.close()
+
+
+def test_deadline_exceeded_is_typed():
+    region = _hinge(1.0251)
+    X, w, y = _hinge_args(20)
+    server = FusionServer(workers=1, max_batch=2, pad_to=32,
+                          autostart=False)
+    server._started = True
+    try:
+        fut = server.submit(region, X, w, y, deadline_s=0.001)
+        time.sleep(0.05)                # expires while queued
+        server._started = False
+        server.start()
+        with pytest.raises(DeadlineExceededError):
+            fut.result(timeout=300)
+        snap = server.metrics.snapshot()
+        assert snap["requests"]["deadline_exceeded"] == 1
+    finally:
+        server.close()
+
+
+def test_bounded_queue_backpressure():
+    region = _hinge(1.0183)
+    args = _hinge_args(20)
+    server = FusionServer(workers=1, max_batch=2, pad_to=32,
+                          max_queue=2, autostart=False)
+    server._started = True
+    try:
+        futs = [server.submit(region, *args) for _ in range(2)]
+        with pytest.raises(QueueFullError):
+            server.submit(region, *args)
+        snap = server.metrics.snapshot()
+        assert snap["resilience"]["rejected"]["backpressure"] == 1
+        server._started = False
+        server.start()
+        for f in futs:
+            _parity(f.result(timeout=300), region(*args))
+    finally:
+        server.close()
+
+
+def test_close_resolves_queued_futures():
+    """Regression: close() used to leave queued futures pending
+    forever; they must resolve with ServerClosedError."""
+    region = _hinge(1.0457)
+    args = _hinge_args(20)
+    server = FusionServer(workers=1, max_batch=2, pad_to=32,
+                          autostart=False)
+    server._started = True
+    futs = [server.submit(region, *args) for _ in range(3)]
+    server.close()
+    for f in futs:
+        assert f.done()
+        with pytest.raises(ServerClosedError):
+            f.result(timeout=0)
+    assert server.metrics.snapshot()["requests"]["cancelled"] == 3
+
+
+# --------------------------------------------------------------------------
+# circuit breaker: opens, half-opens, closes — deterministically
+# --------------------------------------------------------------------------
+
+def test_breaker_quarantines_and_recovers():
+    region = _hinge(1.0871)
+    X, w, y = _hinge_args(20)
+    server = FusionServer(workers=1, max_batch=2, pad_to=32,
+                          retry_budget=0, breaker_threshold=2,
+                          breaker_cooldown_s=0.3)
+    try:
+        sched = faults.FaultSchedule([
+            faults.FaultRule("serve.batch_dispatch", kind="error",
+                             at=(0, 1, 2))])
+        with faults.inject(sched):
+            # two consecutive tier-0 failures (budget 0: no ladder) ...
+            for _ in range(2):
+                with pytest.raises(RequestFailedError):
+                    server.submit(region, X, w, y).result(timeout=300)
+            # ... open the breaker: typed rejection at submit
+            with pytest.raises(PlanQuarantinedError):
+                server.submit(region, X, w, y)
+            # cooldown → half-open probe; the probe fails → re-open
+            time.sleep(0.35)
+            with pytest.raises(RequestFailedError):
+                server.submit(region, X, w, y).result(timeout=300)
+            with pytest.raises(PlanQuarantinedError):
+                server.submit(region, X, w, y)
+            # cooldown → probe succeeds (schedule exhausted) → closed
+            time.sleep(0.35)
+            got = server.submit(region, X, w, y).result(timeout=300)
+        _parity(got, region(X, w, y))
+        snap = server.metrics.snapshot()
+        assert snap["resilience"]["breaker"]["opens"] == 2
+        assert snap["resilience"]["breaker"]["probes"] == 2
+        assert snap["resilience"]["breaker"]["closes"] == 1
+        assert snap["resilience"]["rejected"]["quarantined"] == 2
+        report = server.metrics.report(server)
+        assert report["server"]["breaker"]["quarantined"] == []
+        states = {r["key"]: r["state"]
+                  for r in server.breaker.snapshot()}
+        assert "closed" in states.values()
+    finally:
+        server.close()
+
+
+# --------------------------------------------------------------------------
+# randomized chaos sweep (REPRO_CHAOS_CASES scales it; CI full job: 100)
+# --------------------------------------------------------------------------
+
+N_CASES = int(os.environ.get("REPRO_CHAOS_CASES", "6"))
+
+
+def _random_schedule(case_rng) -> faults.FaultSchedule:
+    rules = []
+    if case_rng.random() < 0.8:
+        kind = case_rng.choice(["error", "nonfinite", "latency"])
+        rules.append(faults.FaultRule(
+            "serve.batch_dispatch", kind=str(kind),
+            p=float(case_rng.uniform(0.05, 0.3)),
+            count=int(case_rng.integers(1, 6)), delay_s=0.005))
+    if case_rng.random() < 0.5:
+        rules.append(faults.FaultRule(
+            "serve.worker", kind="crash",
+            p=float(case_rng.uniform(0.02, 0.12)),
+            count=int(case_rng.integers(1, 3))))
+    if case_rng.random() < 0.3:
+        rules.append(faults.FaultRule(
+            "serve.worker", kind="latency", p=0.2, count=3,
+            delay_s=0.005))
+    return faults.FaultSchedule(rules, seed=int(case_rng.integers(1 << 30)))
+
+
+@pytest.mark.parametrize("case", range(N_CASES))
+def test_chaos_no_request_lost(case):
+    """THE invariant: under a random seeded multi-fault schedule every
+    submitted request resolves — result (with parity) or typed error —
+    and the worker pool ends at full strength."""
+    case_rng = np.random.default_rng(1000 + case)
+    hinge, probs = _hinge(1.0 + case / 512.0), _probs()
+    W = rng.normal(size=(16, 5)).astype(np.float32)
+    cases = []
+    for m in (20, 40, 25, 33):
+        cases.append((hinge, _hinge_args(m)))
+        Xp = rng.normal(size=(m, 16)).astype(np.float32)
+        cases.append((probs, (Xp, W)))
+    refs = [r(*args) for r, args in cases]      # fault-free references
+    sched = _random_schedule(case_rng)
+    server = FusionServer(workers=2, max_batch=4, pad_to=32,
+                          check_finite=True, retry_budget=4)
+    try:
+        with faults.inject(sched):
+            futs = [server.submit(r, *args) for r, args in cases]
+            outcomes = []
+            for f in futs:
+                try:
+                    outcomes.append(("ok", f.result(timeout=300)))
+                except FusionServeError as e:
+                    outcomes.append(("err", e))
+            for f in futs:
+                assert f.done(), "request lost: future never resolved"
+        for (kind, val), ref in zip(outcomes, refs):
+            if kind == "ok":
+                _parity(val, ref)               # degraded paths stay exact
+        alive = [t for t in server._threads if t.is_alive()]
+        assert len(alive) == server.workers, "a worker stayed dead"
+        snap = server.metrics.snapshot()
+        resolved = (snap["requests"]["completed"] +
+                    snap["requests"]["failed"] +
+                    snap["requests"]["deadline_exceeded"])
+        assert resolved == len(cases)
+    finally:
+        server.close()
+    # uninstalled: the same server config serves cleanly afterwards
+    assert faults.active() is None

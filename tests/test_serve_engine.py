@@ -7,7 +7,8 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import LM
-from repro.serve import AdmissionError, Engine, Request
+from repro.serve import (AdmissionError, DeadlineExceededError, Engine,
+                         QueueFullError, Request)
 
 
 @pytest.fixture(scope="module")
@@ -86,6 +87,46 @@ def test_admission_rejects_impossible_requests(setup):
     engine.run_until_done()
     assert ok[0].done and len(ok[0].out) == 1
     assert ok[1].done and len(ok[1].out) == 3
+
+
+def test_bounded_queue_rejects_with_typed_error(setup):
+    cfg, _, params = setup
+    rng = np.random.default_rng(3)
+    engine = Engine(cfg, params, batch_slots=1, max_len=32, max_queue=2)
+
+    def req():
+        return Request(prompt=rng.integers(0, cfg.vocab, size=4)
+                       .astype(np.int32), max_new=2)
+
+    admitted = [req(), req()]
+    for r in admitted:
+        engine.submit(r)
+    with pytest.raises(QueueFullError):
+        engine.submit(req())
+    engine.run_until_done()               # admitted requests still finish
+    assert all(r.done and len(r.out) == 2 for r in admitted)
+
+
+def test_deadline_expires_queued_request(setup):
+    """A request whose deadline lapses while queued finishes with
+    ``done=True`` and a typed ``error`` instead of decoding forever;
+    requests without deadlines are unaffected."""
+    cfg, _, params = setup
+    rng = np.random.default_rng(4)
+    engine = Engine(cfg, params, batch_slots=1, max_len=32)
+
+    late = Request(prompt=rng.integers(0, cfg.vocab, size=4)
+                   .astype(np.int32), max_new=2, deadline_s=0.0)
+    ok = Request(prompt=rng.integers(0, cfg.vocab, size=4)
+                 .astype(np.int32), max_new=2)
+    engine.submit(late)
+    engine.submit(ok)
+    import time
+    time.sleep(0.01)                      # let the deadline lapse
+    engine.run_until_done()
+    assert late.done and isinstance(late.error, DeadlineExceededError)
+    assert late.out == []
+    assert ok.done and ok.error is None and len(ok.out) == 2
 
 
 @pytest.mark.parametrize("layout", ["fixed", "auto"])

@@ -6,11 +6,12 @@ Two checks over ``README.md`` and ``docs/*.md``:
 1. **Link check** — every relative markdown link target must exist on
    disk (external http(s)/mailto links are skipped to keep the job
    hermetic; pure #anchors are skipped).
-2. **Snippet drift** — every README code block between
+2. **Snippet drift** — every code block between
    ``<!-- ci:NAME:start -->`` and ``<!-- ci:NAME:end -->`` markers
-   (``quickstart``, ``serving``, ...) is extracted verbatim and
-   executed with ``PYTHONPATH=src``; any API drift that breaks a
-   documented snippet fails here.
+   (``quickstart``, ``serving``, ``faults``, ...) in README.md *or*
+   any ``docs/*.md`` file is extracted verbatim and executed with
+   ``PYTHONPATH=src``; any API drift that breaks a documented snippet
+   fails here.
 
 Usage: ``python tools/check_docs.py`` (from the repo root; exits
 nonzero on failure).
@@ -56,29 +57,32 @@ def check_links() -> list[str]:
 
 
 def snippet_names() -> list[str]:
-    """Every ``ci:NAME`` snippet marker present in README.md."""
-    text = (REPO / "README.md").read_text()
-    return list(dict.fromkeys(re.findall(r"<!-- ci:(\w+):start -->",
-                                         text)))
+    """Every ``ci:NAME`` snippet marker across README.md + docs/*.md."""
+    names: list[str] = []
+    for doc in doc_files():
+        names.extend(re.findall(r"<!-- ci:(\w+):start -->",
+                                doc.read_text()))
+    return list(dict.fromkeys(names))
 
 
 def ci_snippet(name: str) -> str:
-    """The verbatim ``ci:name`` code block from README.md."""
-    text = (REPO / "README.md").read_text()
-    m = re.search(rf"<!-- ci:{name}:start -->\s*```python\n(.*?)```\s*"
-                  rf"<!-- ci:{name}:end -->", text, re.DOTALL)
-    if m is None:
-        raise AssertionError(
-            f"README.md: ci:{name} markers (or the ```python block "
-            "between them) not found")
-    return m.group(1)
+    """The verbatim ``ci:name`` code block (README.md or docs/*.md)."""
+    for doc in doc_files():
+        m = re.search(rf"<!-- ci:{name}:start -->\s*```python\n(.*?)```"
+                      rf"\s*<!-- ci:{name}:end -->", doc.read_text(),
+                      re.DOTALL)
+        if m is not None:
+            return m.group(1)
+    raise AssertionError(
+        f"ci:{name} markers (or the ```python block between them) not "
+        "found in README.md or docs/*.md")
 
 
 def run_snippet(name: str) -> subprocess.CompletedProcess:
-    """Execute one README ci-snippet in a fresh interpreter."""
+    """Execute one documented ci-snippet in a fresh interpreter."""
     import os
     snippet = ci_snippet(name)
-    with tempfile.NamedTemporaryFile("w", suffix=f"_readme_{name}.py",
+    with tempfile.NamedTemporaryFile("w", suffix=f"_docs_{name}.py",
                                      delete=False) as f:
         f.write(snippet)
         path = f.name
@@ -116,7 +120,7 @@ def main() -> int:
     for name in names:
         res = run_snippet(name)
         if res.returncode != 0:
-            print(f"SNIPPET FAIL ci:{name} (README drifted from the "
+            print(f"SNIPPET FAIL ci:{name} (docs drifted from the "
                   "code):")
             print(res.stdout)
             print(res.stderr)

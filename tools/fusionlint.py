@@ -209,6 +209,34 @@ def lint_serving(level: str, verbose: bool) -> tuple[int, list[str]]:
     return n, failed
 
 
+def lint_faults(verbose: bool) -> int:
+    """``--faults``: audit the fault-injection site registry.  Imports
+    every module that declares a site (``faults.ensure_registered``) and
+    fails if no sites exist or any site lacks a documented handler —
+    the fault-tolerance analogue of no-silent-fallback: a site you can
+    inject at but nothing recovers from is a latent outage."""
+    from repro import faults
+
+    sites = faults.ensure_registered()
+    bad = 0
+    for site in sorted(sites, key=lambda s: s.name):
+        ok = bool(site.handler.strip())
+        if not ok:
+            bad += 1
+        if verbose or not ok:
+            status = "OK" if ok else "MISSING HANDLER"
+            print(f"{site.name}: kinds={','.join(site.kinds)} [{status}]")
+            if ok:
+                print(f"  handler: {site.handler}")
+    print(f"fusionlint: {len(sites)} fault site(s) registered, "
+          f"{bad} without a handler")
+    if not sites:
+        print("fusionlint: no fault sites registered — the injection "
+              "harness is disconnected from the stack")
+        return 1
+    return 1 if bad else 0
+
+
 def lint(algos: list[str], modes: list[str], level: str,
          verbose: bool, serving: bool = False) -> int:
     n_plans = n_errors = n_warnings = n_fallbacks = n_silent = 0
@@ -283,11 +311,17 @@ def main(argv=None) -> int:
     ap.add_argument("--serving", action="store_true",
                     help="also verify the plans the serving harness "
                          "compiles (warmed FusionServer cache)")
+    ap.add_argument("--faults", action="store_true",
+                    help="audit the fault-injection site registry: list "
+                         "every site and fail on any without a "
+                         "documented handler")
     ap.add_argument("--verbose", action="store_true",
                     help="print every verified plan, including clean "
                          "ones")
     args = ap.parse_args(argv)
 
+    if args.faults:
+        return lint_faults(args.verbose)
     algos = [a.strip() for a in args.algo.split(",") if a.strip()]
     modes = list(MODES) if args.mode == "all" else \
         [m.strip() for m in args.mode.split(",") if m.strip()]
